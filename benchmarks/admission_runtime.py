@@ -1,0 +1,51 @@
+"""Paper Fig 9: Admission Control Module running time vs #frames.
+
+Traces whose requests contain 1e2..1e5 frames; wall-clock of one full
+admission decision (Phase 1 + pseudo-job generation + EDF imitator).
+The paper reports sub-second up to 1e4 and ~5.9 s at 1e5 on a TX2; the
+complexity is linear in the number of frames.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import paper_table, write_csv
+from repro.core import Category, DeepRT, Request
+
+
+def admission_time(n_frames: int, n_existing: int = 5) -> float:
+    table = paper_table()
+    sched = DeepRT(table, adaptation_enabled=False)
+    cat = Category("resnet50", (3, 224, 224))
+    for i in range(n_existing):
+        sched.submit_request(
+            Request(category=cat, period=0.2, relative_deadline=0.6,
+                    n_frames=n_frames)
+        )
+    pending = Request(
+        category=cat, period=0.2, relative_deadline=0.6, n_frames=n_frames
+    )
+    t0 = time.perf_counter()
+    sched.submit_request(pending)
+    return time.perf_counter() - t0
+
+
+def main() -> List[str]:
+    rows = []
+    lines = []
+    for n in [100, 1000, 10000, 100000]:
+        ts = [admission_time(n) for _ in range(3)]
+        med = sorted(ts)[1]
+        rows.append([n, med])
+        lines.append(f"fig9,frames_{n},admission_runtime_s,{med:.4f}")
+    write_csv("fig9_admission_runtime", ["n_frames", "runtime_s"], rows)
+    # Linearity check: runtime(1e5)/runtime(1e3) should be ~1e2, not 1e4.
+    r = rows[-1][1] / max(rows[1][1], 1e-9)
+    lines.append(f"fig9,linearity,runtime_1e5_over_1e3,{r:.1f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

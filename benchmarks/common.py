@@ -1,0 +1,100 @@
+"""Shared fixtures for the benchmark harness.
+
+WCET tables are calibrated to the paper's own measurements (Table 1
+single-model execution times on the RTX 2080, batching slopes from Fig
+2c): E(model, resolution, b) = (a + c*b) * pixel_scale. The same tables
+drive DeepRT and every baseline, so comparisons isolate SCHEDULING — the
+paper's methodology.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import random
+from typing import Dict, List, Tuple
+
+from repro.core import Category, ProfileTable, Request, TraceSpec, generate_trace
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# Paper Table 1 "-" column: solo execution time at batch 1 (seconds).
+PAPER_BATCH1 = {
+    "resnet50": 0.0035,
+    "resnet101": 0.0064,
+    "resnet152": 0.0090,
+    "vgg16": 0.0045,
+    "vgg19": 0.0053,
+    "inception_v3": 0.0093,
+    "mobilenet_v2": 0.0020,
+}
+# Marginal per-image cost as a fraction of the batch-1 cost (Fig 2c shows
+# sub-linear batching: batch 8 ≈ 3-4x batch 1).
+BATCH_SLOPE = 0.35
+
+RESOLUTIONS = [(3, 224, 224), (3, 240, 352), (3, 480, 854), (3, 1080, 1920)]
+
+
+def pixel_scale(shape: Tuple[int, ...]) -> float:
+    return (shape[1] * shape[2]) / (224.0 * 224.0)
+
+
+def paper_table(models=None, resolutions=None, max_batch: int = 256) -> ProfileTable:
+    table = ProfileTable()
+    models = models or list(PAPER_BATCH1)
+    resolutions = resolutions or RESOLUTIONS
+    for m in models:
+        a = PAPER_BATCH1[m]
+        for shape in resolutions:
+            s = pixel_scale(shape)
+            # Also profile the adaptation module's reduced shapes.
+            for res in [shape, (shape[0], shape[1] // 2, shape[2] // 2)]:
+                sc = pixel_scale(res)
+                b = 1
+                while b <= max_batch:
+                    table.record(m, res, b, (a + a * BATCH_SLOPE * (b - 1)) * max(sc, 0.05))
+                    b *= 2
+    return table
+
+
+def paper_trace(
+    mean_period: float,
+    mean_deadline: float,
+    seed: int = 0,
+    n_requests: int = 25,
+    models=("resnet50", "resnet101", "vgg16", "mobilenet_v2"),
+    resolutions=((3, 224, 224), (3, 240, 352)),
+    frames=(30, 120),
+    mean_interarrival: float = 1.0,
+) -> List[Request]:
+    return generate_trace(
+        TraceSpec(
+            mean_period=mean_period,
+            mean_deadline=mean_deadline,
+            n_requests=n_requests,
+            frames_per_request=frames,
+            models=models,
+            shapes=resolutions,
+            max_categories=4,
+            mean_interarrival=mean_interarrival,
+            seed=seed,
+        )
+    )
+
+
+def frame_bytes(shape: Tuple[int, ...]) -> float:
+    import math
+
+    n = 1
+    for d in shape:
+        n *= d
+    return 4.0 * n  # f32 input tensors
+
+
+def write_csv(name: str, header: List[str], rows: List[List]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path

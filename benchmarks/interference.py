@@ -1,0 +1,118 @@
+"""Paper Fig 2a/2b + Table 1: concurrency & interference characterization.
+
+TPUs have no CUDA-style context multiplexing (DESIGN.md §2), so this is
+the one benchmark that runs entirely on the time-sliced concurrency
+MODEL (ProcessorSharingDevice), reproducing the paper's measured shape:
+execution time grows ~linearly with concurrency while throughput
+saturates — the analysis that motivates sequential execution + batching.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import PAPER_BATCH1, paper_table, write_csv
+from repro.core import Category, EventLoop, ProcessorSharingDevice
+
+
+def run_concurrency(model: str, concurrency: int, horizon: float = 20.0):
+    """Closed-loop clients: each of ``concurrency`` streams keeps one
+    request in flight (the paper's perf_analyzer protocol)."""
+    exec_time = PAPER_BATCH1[model]
+    loop = EventLoop()
+    device = ProcessorSharingDevice(loop)
+    completed = []
+    latencies = []
+
+    def submit(stream_id):
+        start = loop.now
+
+        def done(job, now):
+            completed.append(now)
+            latencies.append(now - start)
+            if now < horizon:
+                submit(stream_id)
+
+        device.submit(stream_id, exec_time, done)
+
+    for s in range(concurrency):
+        submit(s)
+    loop.run(until=horizon)
+    n = len(completed)
+    med = sorted(latencies)[len(latencies) // 2] if latencies else 0.0
+    return med, n / horizon
+
+
+def run_pair(model_a: str, model_b: str, horizon: float = 20.0):
+    """Table 1: model A and model B concurrently, one in flight each."""
+    loop = EventLoop()
+    device = ProcessorSharingDevice(loop)
+    stats = {model_a: [], model_b: []}
+
+    def submit(model):
+        start = loop.now
+
+        def done(job, now):
+            stats[model].append(now - start)
+            if now < horizon:
+                submit(model)
+
+        device.submit(model, PAPER_BATCH1[model], done)
+
+    submit(model_a)
+    if model_b is not None:
+        submit(model_b)
+    loop.run(until=horizon)
+    lat = stats[model_a]
+    med = sorted(lat)[len(lat) // 2]
+    return med, len(lat) / horizon
+
+
+def run_batching(model: str, batch: int, horizon: float = 20.0):
+    """Fig 2c/2d on the calibrated table: batched execution, one in flight."""
+    table = paper_table()
+    e = table.wcet(model, (3, 224, 224), batch)
+    return e, batch / e  # latency, imgs/s
+
+
+def main() -> List[str]:
+    rows = []
+    for model in ["resnet50", "vgg16", "inception_v3"]:
+        base_med, _ = run_concurrency(model, 1)
+        for c in [1, 2, 3, 4, 6]:
+            med, thpt = run_concurrency(model, c)
+            rows.append(["concurrency", model, c, med, thpt, med / base_med])
+        for b in [1, 2, 4, 8, 16]:
+            lat, thpt = run_batching(model, b)
+            rows.append(["batching", model, b, lat, thpt, 0.0])
+    pair_rows = []
+    models = list(PAPER_BATCH1)[:6]
+    for a in models:
+        solo_med, solo_thpt = run_pair(a, None)
+        pair_rows.append([a, "-", solo_med, solo_thpt])
+        for b in models:
+            med, thpt = run_pair(a, b)
+            pair_rows.append([a, b, med, thpt])
+    write_csv(
+        "fig2_concurrency_batching",
+        ["mode", "model", "level", "median_latency_s", "throughput_ips", "slowdown"],
+        rows,
+    )
+    write_csv(
+        "table1_interference",
+        ["model", "concurrent_with", "median_exec_s", "throughput_ips"],
+        pair_rows,
+    )
+    # Headline checks reproducing the paper's two observations.
+    rn_lat_c4 = next(r for r in rows if r[0] == "concurrency" and r[1] == "resnet50" and r[2] == 4)
+    rn_b4 = next(r for r in rows if r[0] == "batching" and r[1] == "resnet50" and r[2] == 4)
+    rn_b1 = next(r for r in rows if r[0] == "batching" and r[1] == "resnet50" and r[2] == 1)
+    return [
+        f"fig2a,resnet50,concurrency4_slowdown,{rn_lat_c4[5]:.2f}",
+        f"fig2cd,resnet50,batch4_latency_vs_batch1,{rn_b4[3]/rn_b1[3]:.2f}",
+        f"fig2f,resnet50,batch4_thpt_gain,{rn_b4[4]/rn_b1[4]:.2f}",
+    ]
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

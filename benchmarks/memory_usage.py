@@ -1,0 +1,64 @@
+"""Paper Fig 6: peak memory of DeepRT vs the concurrent baselines.
+
+Tracked as live batch-buffer bytes on the device models (sequential
+execution holds at most one batch; concurrent baselines stack batches
+across categories — the effect the paper measures with nvidia-smi).
+"""
+from __future__ import annotations
+
+import copy
+from typing import List
+
+from benchmarks.common import frame_bytes, paper_table, paper_trace, write_csv
+from repro.core import AIMD, BATCH, BATCHDelay, DeepRT, ExecutionModel
+
+
+def job_bytes(job) -> float:
+    shape = getattr(job, "shape_key", None) or job.category.shape_key
+    return frame_bytes(shape) * job.batch_size
+
+
+def run(mean_pd: float, seed: int) -> List[List]:
+    table = paper_table()
+    reqs = paper_trace(mean_pd, mean_pd, seed=seed)
+    deep = DeepRT(
+        table, execution=ExecutionModel(actual_fn=lambda j, w: 0.95 * w),
+        adaptation_enabled=False,
+    )
+    deep.worker.job_bytes_fn = job_bytes
+    accepted = [copy.deepcopy(r) for r in reqs if deep.submit_request(r).admitted]
+    deep.run()
+    rows = [["DeepRT", mean_pd, seed, deep.device.peak_bytes / 1e6]]
+    for name, mk in [
+        ("AIMD", lambda t: AIMD(t, actual_fn=lambda j, w: 0.95 * w)),
+        ("BATCH", lambda t: BATCH(t, actual_fn=lambda j, w: 0.95 * w, batch_size=4)),
+        ("BATCH-Delay", lambda t: BATCHDelay(
+            t, actual_fn=lambda j, w: 0.95 * w, batch_size=4, max_delay=mean_pd / 2
+        )),
+    ]:
+        sched = mk(table)
+        sched.job_bytes_fn = job_bytes
+        for r in accepted:
+            sched.submit_request(copy.deepcopy(r))
+        sched.run()
+        rows.append([name, mean_pd, seed, sched.device.peak_bytes / 1e6])
+    return rows
+
+
+def main() -> List[str]:
+    rows = []
+    for mean_pd in [0.05, 0.15, 0.25]:
+        for seed in (0, 1):
+            rows += run(mean_pd, seed)
+    write_csv("fig6_peak_memory", ["scheduler", "trace", "seed", "peak_mb"], rows)
+    agg = {}
+    for r in rows:
+        agg.setdefault(r[0], []).append(r[3])
+    return [
+        f"fig6,{k},mean_peak_batch_mb,{sum(v)/len(v):.1f}" for k, v in agg.items()
+    ]
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

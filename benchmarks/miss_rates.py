@@ -1,0 +1,113 @@
+"""Paper Fig 4 + Fig 5: deadline miss rates and overdue-time CDFs.
+
+DeepRT vs AIMD (Clipper), BATCH, BATCH-Delay (Triton) on six synthesized
+traces (desktop 50/150/250 ms, jetson 300/450/600 ms — paper Table 2).
+Per the paper's fairness protocol (§6.2): DeepRT's admission decides the
+request set, the SAME accepted requests are fed to every baseline, and
+DeepRT's Adaptation Module is disabled.
+"""
+from __future__ import annotations
+
+import copy
+import random
+from typing import Dict, List
+
+from benchmarks.common import paper_table, paper_trace, write_csv
+from repro.core import AIMD, BATCH, BATCHDelay, DeepRT, ExecutionModel
+
+JETSON_SCALE = 6.0  # paper: TX2 is ~an order slower than the RTX 2080
+
+
+def actual_sampler(seed: int):
+    rng = random.Random(seed)
+
+    # Real executions sit just under the p99 profile, with jitter, and
+    # occasionally overrun it (the profile is a p99, not a hard bound) —
+    # the paper's DeepRT shows nonzero miss rates for exactly this reason.
+    def fn(job, wcet):
+        if rng.random() < 0.02:
+            return wcet * rng.uniform(1.0, 1.5)
+        return wcet * rng.uniform(0.85, 1.0)
+
+    return fn
+
+
+def run_trace(mean_pd: float, device: str, seed: int) -> List[List]:
+    table = paper_table()
+    if device == "jetson":
+        table = table.scaled(JETSON_SCALE)
+    reqs = paper_trace(mean_pd, mean_pd, seed=seed)
+
+    deep = DeepRT(
+        table,
+        execution=ExecutionModel(actual_fn=actual_sampler(seed)),
+        adaptation_enabled=False,  # paper §6.2 protocol
+    )
+    accepted = [copy.deepcopy(r) for r in reqs if deep.submit_request(r).admitted]
+    m_deep = deep.run()
+
+    rows = []
+    overdue: Dict[str, List[float]] = {"DeepRT": m_deep.overdue_times}
+    rows.append(
+        ["DeepRT", device, mean_pd, len(accepted), m_deep.completed_frames,
+         m_deep.miss_rate, m_deep.throughput, m_deep.mean_batch]
+    )
+    for name, mk in [
+        ("AIMD", lambda t: AIMD(t, actual_fn=actual_sampler(seed))),
+        ("BATCH", lambda t: BATCH(t, actual_fn=actual_sampler(seed), batch_size=4)),
+        (
+            "BATCH-Delay",
+            lambda t: BATCHDelay(
+                t, actual_fn=actual_sampler(seed), batch_size=4,
+                max_delay=mean_pd / 2,
+            ),
+        ),
+    ]:
+        sched = mk(table)
+        for r in accepted:
+            sched.submit_request(copy.deepcopy(r))
+        m = sched.run()
+        overdue[name] = m.overdue_times
+        rows.append(
+            [name, device, mean_pd, len(accepted), m.completed_frames,
+             m.miss_rate, m.throughput, m.mean_batch]
+        )
+    # Fig 5 CDF points.
+    cdf_rows = []
+    for name, times in overdue.items():
+        for t in sorted(times):
+            cdf_rows.append([name, device, mean_pd, t])
+    return rows, cdf_rows
+
+
+def main(seeds=(0, 1, 2)) -> List[str]:
+    rows, cdf_rows = [], []
+    for device, means in [("desktop", [0.05, 0.15, 0.25]),
+                          ("jetson", [0.3, 0.45, 0.6])]:
+        for mp in means:
+            for seed in seeds:
+                r, c = run_trace(mp, device, seed)
+                rows += r
+                cdf_rows += c
+    p1 = write_csv(
+        "fig4_miss_rates",
+        ["scheduler", "device", "mean_period_deadline", "n_admitted",
+         "completed", "miss_rate", "throughput_fps", "mean_batch"],
+        rows,
+    )
+    p2 = write_csv(
+        "fig5_overdue_cdf", ["scheduler", "device", "trace", "overdue_s"], cdf_rows
+    )
+    # Headline: average miss rate per scheduler.
+    agg: Dict[str, List[float]] = {}
+    for r in rows:
+        agg.setdefault(r[0], []).append(r[5])
+    lines = []
+    for name, xs in agg.items():
+        lines.append(f"fig4,{name},mean_miss_rate,{sum(xs)/len(xs):.4f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,115 @@
+"""Beyond-paper: assemble the §Roofline table from dry-run JSON outputs.
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun)
+and emits the per-(arch x shape x mesh) roofline table used verbatim in
+EXPERIMENTS.md: the three terms, dominant bottleneck, model-FLOPs ratio,
+and per-device memory footprint.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import RESULTS_DIR, write_csv
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_cells(pattern: str = "*.json") -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main() -> List[str]:
+    cells = load_cells()
+    rows = []
+    for c in cells:
+        if not c.get("ok"):
+            rows.append(
+                [c["arch"], c["shape"], c["mesh"], c.get("opt", "baseline"),
+                 "FAIL", "", "", "", "", "", "", c.get("error", "")[:80]]
+            )
+            continue
+        r = c["roofline"]
+        mem = c.get("memory_analysis", {})
+        hbm_gb = (
+            mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        ) / 1e9
+        rows.append(
+            [
+                c["arch"], c["shape"], c["mesh"], c.get("opt", "baseline"), "ok",
+                f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+                f"{r['collective_s']:.3e}", r["dominant"],
+                f"{r['useful_flops_ratio']:.3f}" if r.get("useful_flops_ratio") else "",
+                f"{hbm_gb:.2f}", "",
+            ]
+        )
+    write_csv(
+        "roofline_table",
+        ["arch", "shape", "mesh", "opt", "status", "compute_s", "memory_s",
+         "collective_s", "dominant", "useful_flops_ratio",
+         "per_device_arg+temp_GB", "note"],
+        rows,
+    )
+    # Best-variant-per-cell summary: baseline vs the best measured opt.
+    best = {}
+    for c in cells:
+        if not c.get("ok"):
+            continue
+        r = c["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        key = (c["arch"], c["shape"], c["mesh"])
+        entry = best.setdefault(key, {})
+        if c.get("opt", "baseline") == "baseline":
+            entry["baseline"] = bound
+        if "best" not in entry or bound < entry["best"][0]:
+            entry["best"] = (bound, c.get("opt", "baseline"), r["dominant"])
+    summary_rows = []
+    for (a, s, m), e in sorted(best.items()):
+        base = e.get("baseline")
+        b, opt, dom = e["best"]
+        speedup = (base / b) if base and b > 0 else 1.0
+        summary_rows.append(
+            [a, s, m, f"{base:.3e}" if base else "", f"{b:.3e}", opt, dom,
+             f"{speedup:.1f}"]
+        )
+    write_csv(
+        "roofline_best_per_cell",
+        ["arch", "shape", "mesh", "baseline_bound_s", "best_bound_s",
+         "best_variant", "dominant_after", "speedup_x"],
+        summary_rows,
+    )
+    n_ok = sum(1 for r in rows if r[4] == "ok")
+    n_fail = len(rows) - n_ok
+    doms = {}
+    for r in rows:
+        if r[4] == "ok":
+            doms[r[8]] = doms.get(r[8], 0) + 1
+    single = [r for r in summary_rows if r[2] == "16x16" and r[3]]
+    if single:
+        import statistics
+
+        speedups = [float(r[7]) for r in single]
+        geo = (
+            statistics.geometric_mean([max(s, 1e-9) for s in speedups])
+            if speedups
+            else 1.0
+        )
+        extra = [f"roofline,geomean_speedup_single_pod,{geo:.2f}"]
+    else:
+        extra = []
+    return [
+        f"roofline,cells_ok,{n_ok}",
+        f"roofline,cells_fail,{n_fail}",
+        f"roofline,dominant_breakdown,{doms}",
+    ] + extra
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,58 @@
+"""Pod-scale DeepRT: multi-slice cluster with failures, stragglers, and
+elastic re-admission (DESIGN.md §5 / core/cluster.py).
+
+Four slices serve a multi-tenant trace; mid-run one slice fails (its
+requests re-admit elsewhere) and another degrades 3x (its WCET table
+rescales, future admissions see the reduced capacity; in-flight overruns
+drain through the paper's adaptation machinery).
+
+    PYTHONPATH=src python examples/cluster_sim.py
+"""
+from repro.core import (
+    ClusterScheduler,
+    ExecutionModel,
+    SliceSpec,
+    TraceSpec,
+    generate_trace,
+)
+from benchmarks.common import paper_table
+
+cluster = ClusterScheduler(
+    execution=ExecutionModel(actual_fn=lambda j, w: 0.95 * w)
+)
+for i in range(4):
+    cluster.add_slice(SliceSpec(name=f"slice{i}", table=paper_table()))
+
+trace = generate_trace(
+    TraceSpec(
+        mean_period=0.1,
+        mean_deadline=0.25,
+        n_requests=40,
+        frames_per_request=(200, 400),
+        models=("resnet50", "resnet101", "vgg16", "mobilenet_v2"),
+        shapes=((3, 224, 224), (3, 240, 352)),
+        seed=11,
+        mean_interarrival=0.2,
+    )
+)
+placed = sum(cluster.submit_request(r) for r in trace)
+print(f"placed {placed}/{len(trace)} requests across 4 slices")
+print({name: sum(1 for s in cluster.placement.values() if s == name)
+       for name in cluster.slices})
+
+cluster.run(until=5.0)
+print("\nt=5s: slice0 FAILS (node loss) — re-admitting its requests...")
+lost = cluster.fail_slice("slice0")
+print(f"  re-routed {cluster.reroutes}, shed {len(lost)} (admission-protected)")
+
+cluster.run(until=8.0)
+print("t=8s: slice1 degrades 3x (straggler) — future admissions rescaled")
+cluster.mark_slow("slice1", 3.0)
+
+cluster.run()
+agg = cluster.aggregate_metrics()
+print(
+    f"\nfinal: completed={agg['completed_frames']} "
+    f"missed={agg['missed_frames']} (miss rate {agg['miss_rate']:.2%}) "
+    f"rerouted={agg['reroutes']} dropped={agg['dropped_requests']}"
+)

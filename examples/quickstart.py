@@ -1,0 +1,41 @@
+"""Quickstart: the DeepRT scheduler in 40 lines.
+
+Builds a WCET profile table, admits a few periodic inference requests
+through the two-phase Admission Control Module, and runs the DisBatcher
++ EDF pipeline on the virtual clock.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import Category, DeepRT, ProfileTable, Request
+
+# 1. Profile table (paper §4.1): (model, shape, batch) -> worst-case secs.
+table = ProfileTable()
+for batch in [1, 2, 4, 8, 16, 32]:
+    table.record("resnet50", (3, 224, 224), batch, 0.0035 * (1 + 0.35 * (batch - 1)))
+    table.record("resnet50", (3, 112, 112), batch, 0.0012 * (1 + 0.35 * (batch - 1)))
+
+# 2. The scheduler: DisBatcher + EDF worker + admission + adaptation.
+sched = DeepRT(table)
+
+# 3. Clients submit periodic soft real-time requests.
+cat = Category(model_id="resnet50", shape_key=(3, 224, 224))
+for i, (period, deadline) in enumerate([(0.033, 0.1), (0.05, 0.08), (0.02, 0.15)]):
+    req = Request(category=cat, period=period, relative_deadline=deadline, n_frames=90)
+    result = sched.submit_request(req)
+    print(
+        f"request {i}: period={period*1e3:.0f}ms deadline={deadline*1e3:.0f}ms -> "
+        f"{'ADMITTED' if result.admitted else 'REJECTED'} "
+        f"(phase {result.phase}, utilization {result.utilization:.2f})"
+    )
+
+# 4. Run to completion (virtual time) and inspect the guarantees.
+metrics = sched.run()
+print(
+    f"\ncompleted={metrics.completed_frames} frames, "
+    f"missed={metrics.missed_frames} deadlines "
+    f"({metrics.miss_rate:.1%} miss rate)\n"
+    f"jobs executed={metrics.job_count}, mean batch={metrics.mean_batch:.2f}, "
+    f"throughput={metrics.throughput:.1f} frames/s"
+)
+assert metrics.missed_frames == 0, "admitted requests must meet deadlines"
+print("Theorem 1 held: every admitted frame met its deadline.")

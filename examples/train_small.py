@@ -1,0 +1,22 @@
+"""Train a small LM for a few hundred steps with the full substrate:
+sharded train step (rules engine on the host mesh), AdamW, synthetic
+Zipf data pipeline, async checkpointing, crash-resume drill.
+
+    PYTHONPATH=src python examples/train_small.py --steps 200
+    # Fault-tolerance drill:
+    PYTHONPATH=src python examples/train_small.py --steps 200 --fail-at 120
+    PYTHONPATH=src python examples/train_small.py --steps 200   # resumes
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--steps", "200"]
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "granite-3-2b", "--tiny",
+        "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_train_small",
+        *args,
+    ]
+    raise SystemExit(subprocess.call(cmd))

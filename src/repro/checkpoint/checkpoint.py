@@ -1,0 +1,156 @@
+"""Sharded, atomic, async checkpointing with reshard-on-load.
+
+Layout on disk:
+
+    <dir>/step_000123.tmp/...      (in-flight write)
+    <dir>/step_000123/             (atomically renamed when complete)
+        manifest.json              (step, leaf index, shapes, dtypes)
+        leaf_00000.npy ...
+
+Guarantees a 1000-node deployment needs:
+- **atomicity**: a crash mid-save leaves only a ``.tmp`` dir, which
+  restore ignores and the next save garbage-collects — the newest
+  *renamed* directory is always a complete checkpoint;
+- **async**: ``save`` snapshots device arrays to host (device_get) and
+  hands serialization to a background thread, so the train loop stalls
+  only for the device->host copy, not the filesystem;
+- **reshard-on-load**: ``restore`` takes target shardings and
+  ``jax.device_put``s each leaf — loading a 16x16-trained checkpoint
+  onto a 2x16x16 mesh (or a degraded elastic mesh) is the same code
+  path;
+- **retention**: ``keep`` newest checkpoints are preserved.
+
+In a true multi-host deployment each host would write only its
+addressable shards (the manifest already records per-leaf metadata to
+support that extension); in this single-process container leaves are
+gathered before writing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leafpaths(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ----- save -----------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        self.wait()  # one in-flight save at a time
+        # Snapshot on the main thread (device -> host).
+        leaves = [
+            (name, np.asarray(jax.device_get(leaf)))
+            for name, leaf in _leafpaths(tree)
+        ]
+
+        def _write():
+            try:
+                tmp = os.path.join(self.directory, f"step_{step:08d}.tmp")
+                final = os.path.join(self.directory, f"step_{step:08d}")
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
+                manifest = {"step": step, "leaves": []}
+                for i, (name, arr) in enumerate(leaves):
+                    fname = f"leaf_{i:05d}.npy"
+                    np.save(os.path.join(tmp, fname), arr)
+                    manifest["leaves"].append(
+                        {
+                            "name": name,
+                            "file": fname,
+                            "shape": list(arr.shape),
+                            "dtype": str(arr.dtype),
+                        }
+                    )
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+                self._gc()
+            except BaseException as e:  # surfaced by wait()
+                self._error = e
+
+        if blocking:
+            _write()
+            self.wait()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"))
+        # Remove orphaned tmp dirs from crashed saves.
+        for d in os.listdir(self.directory):
+            if d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+
+    # ----- restore ----------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.directory, d, "manifest.json")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        step: int,
+        target: Any,
+        shardings: Optional[Any] = None,
+    ) -> Any:
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs). ``shardings``: matching tree of NamedShardings
+        for reshard-on-load; None = default placement."""
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_name = {e["name"]: e for e in manifest["leaves"]}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+        shard_flat = (
+            treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(flat)
+        )
+        out = []
+        for (kp, leaf), shard in zip(flat, shard_flat):
+            name = jax.tree_util.keystr(kp)
+            entry = by_name[name]
+            arr = np.load(os.path.join(path, entry["file"]))
+            expected = tuple(leaf.shape)
+            if tuple(arr.shape) != expected:
+                raise ValueError(
+                    f"checkpoint leaf {name} shape {arr.shape} != {expected}"
+                )
+            if shard is not None:
+                out.append(jax.device_put(arr, shard))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return treedef.unflatten(out)

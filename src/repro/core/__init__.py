@@ -1,0 +1,70 @@
+"""DeepRT core: the paper's contribution as a composable library."""
+from repro.core.adaptation import AdaptationModule, default_shrink
+from repro.core.admission import (
+    AdmissionControl,
+    AdmissionResult,
+    CategorySnapshot,
+    SystemState,
+    snapshot_from_scheduler,
+)
+from repro.core.baselines import AIMD, BATCH, BATCHDelay, SEDF
+from repro.core.cluster import ClusterScheduler, Slice, SliceSpec
+from repro.core.disbatcher import WINDOW_FRACTION, DisBatcher
+from repro.core.edf import DeadlineQueue, EDFWorker
+from repro.core.profiler import (
+    AnalyticProfiler,
+    HardwareSpec,
+    MeasuredProfiler,
+    ProfileTable,
+)
+from repro.core.request import Category, Frame, JobInstance, PseudoJob, Request
+from repro.core.scheduler import DeepRT, ExecutionModel
+from repro.core.simulator import (
+    EventLoop,
+    Metrics,
+    ProcessorSharingDevice,
+    SequentialDevice,
+    WallClock,
+)
+from repro.core.traces import DESKTOP_TRACES, JETSON_TRACES, TraceSpec, generate_trace
+
+__all__ = [
+    "AdaptationModule",
+    "default_shrink",
+    "AdmissionControl",
+    "AdmissionResult",
+    "CategorySnapshot",
+    "SystemState",
+    "snapshot_from_scheduler",
+    "AIMD",
+    "BATCH",
+    "BATCHDelay",
+    "SEDF",
+    "ClusterScheduler",
+    "Slice",
+    "SliceSpec",
+    "WINDOW_FRACTION",
+    "DisBatcher",
+    "DeadlineQueue",
+    "EDFWorker",
+    "AnalyticProfiler",
+    "HardwareSpec",
+    "MeasuredProfiler",
+    "ProfileTable",
+    "Category",
+    "Frame",
+    "JobInstance",
+    "PseudoJob",
+    "Request",
+    "DeepRT",
+    "ExecutionModel",
+    "EventLoop",
+    "Metrics",
+    "ProcessorSharingDevice",
+    "SequentialDevice",
+    "WallClock",
+    "DESKTOP_TRACES",
+    "JETSON_TRACES",
+    "TraceSpec",
+    "generate_trace",
+]

@@ -1,0 +1,101 @@
+"""Adaptation Module (paper §4.4): penalty-driven overrun recovery.
+
+Each category carries a penalty, initialized to 0. When the Worker
+observes a job instance exceeding its profiled WCET, the excess is added
+to the category's penalty and the DisBatcher is told to emit that
+category's future job instances at a *reduced shape* (the paper shrinks
+image resolution; our TPU adaptation shrinks the padded shape bucket —
+e.g. a prefill bucket of 8192 tokens drops to 4096, which was profiled and
+pre-compiled up front, so adaptation never triggers a recompile).
+
+While reduced, every completed job repays the penalty by the time saved
+relative to the *original-shape* profile; when the penalty reaches 0 the
+original shape is restored.
+
+Where no smaller profiled shape exists (e.g. rwkv6 decode: recurrent state
+is shape-free), the penalty is still tracked — it then drains through
+natural underruns (actual < profiled) — but no shape change happens. This
+is the documented fallback for shape-free categories (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.disbatcher import DisBatcher
+from repro.core.profiler import ProfileTable
+from repro.core.request import Category, JobInstance
+
+ShapeKey = Tuple[int, ...]
+_EPS = 1e-9
+
+
+def default_shrink(shape: ShapeKey) -> Optional[ShapeKey]:
+    """Halve the spatial/sequence dims; None when nothing can shrink.
+
+    (C, H, W) image -> (C, H//2, W//2); (S,) LM bucket -> (S//2,).
+    """
+    if len(shape) == 3:
+        c, h, w = shape
+        if h >= 2 and w >= 2:
+            return (c, h // 2, w // 2)
+        return None
+    if len(shape) >= 1 and shape[-1] >= 2:
+        return shape[:-1] + (shape[-1] // 2,)
+    return None
+
+
+class AdaptationModule:
+    def __init__(
+        self,
+        table: ProfileTable,
+        disbatcher: DisBatcher,
+        shrink_fn: Callable[[ShapeKey], Optional[ShapeKey]] = default_shrink,
+        enabled: bool = True,
+    ):
+        self.table = table
+        self.disbatcher = disbatcher
+        self.shrink_fn = shrink_fn
+        self.enabled = enabled
+        self.penalties: Dict[Category, float] = {}
+        self.shape_changes = 0  # telemetry
+        self.restores = 0
+
+    def penalty(self, category: Category) -> float:
+        return self.penalties.get(category, 0.0)
+
+    def _shrunken(self, category: Category) -> Optional[ShapeKey]:
+        """The next profiled shape below the category's current shape."""
+        cur = self.disbatcher.shape_override(category) or category.shape_key
+        cand = self.shrink_fn(cur)
+        while cand is not None:
+            if self.table.has(category.model_id, cand):
+                return cand
+            cand = self.shrink_fn(cand)
+        return None
+
+    def on_job_complete(self, job: JobInstance, actual: float) -> None:
+        if not self.enabled:
+            return
+        cat = job.category
+        if job.shape_key == cat.shape_key:
+            # Running at original shape: only overruns matter here.
+            profiled = self.table.wcet(cat.model_id, job.shape_key, job.batch_size)
+            excess = actual - profiled
+            if excess > _EPS:
+                self.penalties[cat] = self.penalties.get(cat, 0.0) + excess
+                reduced = self._shrunken(cat)
+                if reduced is not None:
+                    self.disbatcher.set_shape_override(cat, reduced)
+                    self.shape_changes += 1
+            return
+        # Running reduced: repay penalty by time saved vs the original
+        # shape's profile (paper: "subtract the saved execution time").
+        profiled_orig = self.table.wcet(cat.model_id, cat.shape_key, job.batch_size)
+        saved = profiled_orig - actual
+        p = self.penalties.get(cat, 0.0) - saved
+        if p <= _EPS:
+            self.penalties[cat] = 0.0
+            self.disbatcher.set_shape_override(cat, None)
+            self.restores += 1
+        else:
+            self.penalties[cat] = p

@@ -1,0 +1,171 @@
+"""Cluster scheduler: DeepRT at pod scale (beyond-paper layer).
+
+The paper schedules one GPU. At pod scale a deployment runs many *slices*
+(a pod, or a sub-mesh hosting one model's SPMD program). Each slice runs
+its own DeepRT instance (DisBatcher + EDF + admission) — the paper's
+design is per-accelerator, so it shards naturally. This layer adds what a
+1000-node deployment needs on top:
+
+- placement: route a new request to the slice with the lowest Phase-1
+  utilization that can host its category (capability = profiled model);
+  admission on the chosen slice decides finally (spill to the next
+  candidate on rejection);
+- fault tolerance: on slice failure every in-flight request of that slice
+  is *re-admitted* elsewhere — the paper's admission test doubles as the
+  recovery policy, so recovery never overloads surviving slices;
+- degraded capacity / stragglers: a slice may be marked slow with factor f;
+  its WCET table is scaled by f (ProfileTable.scaled) and its *future*
+  admissions see the degraded table, while the overrun/adaptation machinery
+  (paper §4.4) absorbs the transient — the paper's penalty mechanism is
+  precisely straggler mitigation at this level;
+- elastic scale-up: adding a slice makes its capacity available to the
+  placement loop immediately.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.profiler import ProfileTable
+from repro.core.request import Request
+from repro.core.scheduler import DeepRT, ExecutionModel
+from repro.core.simulator import EventLoop
+
+
+@dataclass
+class SliceSpec:
+    name: str
+    table: ProfileTable  # per-slice WCET table (mesh-dependent)
+    models: Optional[Sequence[str]] = None  # None = hosts any profiled model
+
+
+class Slice:
+    def __init__(self, spec: SliceSpec, loop: EventLoop, execution=None,
+                 adaptation_enabled: bool = True):
+        self.spec = spec
+        self.scheduler = DeepRT(
+            spec.table, loop=loop, execution=execution,
+            adaptation_enabled=adaptation_enabled,
+        )
+        self.alive = True
+        self.slow_factor = 1.0
+
+    def hosts(self, request: Request) -> bool:
+        if not self.alive:
+            return False
+        if self.spec.models is not None and request.category.model_id not in self.spec.models:
+            return False
+        return self.spec.table.has(
+            request.category.model_id, request.category.shape_key
+        )
+
+    def utilization(self) -> float:
+        sched = self.scheduler
+        state_cats = []
+        from repro.core.admission import snapshot_from_scheduler
+
+        state = snapshot_from_scheduler(
+            now=sched.loop.now,
+            disbatcher=sched.disbatcher,
+            queued_jobs=sched.worker.queue.snapshot(),
+            device_free_at=sched.device.busy_until or sched.loop.now,
+            table=sched.table,
+        )
+        return sched.admission.phase1_utilization(state.categories)
+
+
+class ClusterScheduler:
+    def __init__(self, loop: Optional[EventLoop] = None, execution=None):
+        self.loop = loop if loop is not None else EventLoop()
+        self.execution = execution
+        self.slices: Dict[str, Slice] = {}
+        # request -> slice name, for failure recovery:
+        self.placement: Dict[int, str] = {}
+        self.requests: Dict[int, Request] = {}
+        self.dropped: List[Request] = []
+        self.reroutes = 0
+
+    # -- elasticity ------------------------------------------------------
+    def add_slice(self, spec: SliceSpec) -> Slice:
+        sl = Slice(spec, self.loop, execution=self.execution)
+        self.slices[spec.name] = sl
+        return sl
+
+    def mark_slow(self, name: str, factor: float) -> None:
+        """Straggler: scale the slice's WCET table for future admissions;
+        running work is absorbed by the paper's adaptation machinery."""
+        sl = self.slices[name]
+        sl.slow_factor = factor
+        sl.scheduler.table = sl.spec.table.scaled(factor)
+        sl.scheduler.admission.table = sl.scheduler.table
+
+    def fail_slice(self, name: str) -> List[Request]:
+        """Kill a slice; re-admit its unfinished requests elsewhere.
+
+        Returns requests that could not be re-placed (shed load — in a
+        soft-RT system overload sheds rather than cascades)."""
+        sl = self.slices[name]
+        sl.alive = False
+        displaced = []
+        now = self.loop.now
+        for rid, placed_on in list(self.placement.items()):
+            if placed_on != name:
+                continue
+            req = self.requests[rid]
+            if req.end_time <= now:
+                continue  # already fully arrived; frames lost with the slice
+            del self.placement[rid]
+            remaining = req.n_frames - max(
+                0, int((now - req.start_time) / req.period) + 1
+            )
+            if remaining <= 0:
+                continue
+            # Re-admit the remaining tail as a fresh request.
+            tail = Request(
+                category=req.category,
+                period=req.period,
+                relative_deadline=req.relative_deadline,
+                n_frames=remaining,
+                start_time=now + req.period,
+            )
+            displaced.append(tail)
+        lost = []
+        for req in displaced:
+            if not self.submit_request(req):
+                lost.append(req)
+            else:
+                self.reroutes += 1
+        return lost
+
+    # -- placement + admission --------------------------------------------
+    def submit_request(self, request: Request) -> bool:
+        candidates = [s for s in self.slices.values() if s.hosts(request)]
+        candidates.sort(key=lambda s: s.utilization())
+        for sl in candidates:
+            result = sl.scheduler.submit_request(request)
+            if result.admitted:
+                self.placement[request.request_id] = sl.spec.name
+                self.requests[request.request_id] = request
+                return True
+        self.dropped.append(request)
+        return False
+
+    # -- metrics ----------------------------------------------------------
+    def run(self, until: Optional[float] = None) -> None:
+        self.loop.run(until)
+
+    def aggregate_metrics(self) -> Dict[str, float]:
+        total = missed = jobs = 0
+        for sl in self.slices.values():
+            m = sl.scheduler.metrics
+            total += m.completed_frames
+            missed += m.missed_frames
+            jobs += m.job_count
+        return {
+            "completed_frames": total,
+            "missed_frames": missed,
+            "miss_rate": missed / total if total else 0.0,
+            "jobs": jobs,
+            "dropped_requests": len(self.dropped),
+            "reroutes": self.reroutes,
+        }

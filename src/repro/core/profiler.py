@@ -1,0 +1,234 @@
+"""Performance Profiler (paper §4.1): WCET lookup tables.
+
+The paper profiles each (model, input shape, batch size) offline on the
+physical GPU and stores 99th-percentile execution times. We keep that
+interface but provide two backends:
+
+- ``MeasuredProfiler``: times a callable (a jit-compiled JAX step) over
+  repeated runs and stores the 99th percentile. This is the paper's method
+  verbatim; on this CPU-only container it is used with reduced models, and
+  the identical code path would run against a real TPU.
+
+- ``AnalyticProfiler``: derives WCET from the roofline terms of the
+  *compiled* program (``cost_analysis`` FLOPs/bytes + collective bytes
+  parsed from the HLO), scaled by hardware constants and a calibration
+  factor. This extends the table to meshes/shapes that were never measured,
+  which the elastic-scaling path needs (a slice failure changes capacity —
+  re-admission must not wait for a full re-profile).
+
+Both produce a ``ProfileTable``. Lookups for unprofiled batch sizes are
+*conservative*: we round the batch size up to the next profiled size (a
+larger batch never executes faster per the paper's Fig 2c), falling back to
+linear extrapolation from the two largest profiled points beyond the table.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.request import Category
+
+ShapeKey = Tuple[int, ...]
+TableKey = Tuple[str, ShapeKey]
+
+
+def _percentile(sorted_xs: List[float], q: float) -> float:
+    if not sorted_xs:
+        raise ValueError("empty sample")
+    idx = min(len(sorted_xs) - 1, int(math.ceil(q * len(sorted_xs))) - 1)
+    return sorted_xs[max(0, idx)]
+
+
+@dataclass
+class ProfileTable:
+    """WCET lookup: (model_id, shape_key) -> {batch_size: seconds}."""
+
+    entries: Dict[TableKey, Dict[int, float]] = field(default_factory=dict)
+    # Multiplies every lookup; the cluster layer uses it to model degraded
+    # capacity (e.g. a straggling or partially failed slice).
+    capacity_scale: float = 1.0
+
+    def record(
+        self, model_id: str, shape_key: ShapeKey, batch_size: int, wcet: float
+    ) -> None:
+        if wcet <= 0:
+            raise ValueError(f"wcet must be positive, got {wcet}")
+        self.entries.setdefault((model_id, tuple(shape_key)), {})[batch_size] = wcet
+
+    def has(self, model_id: str, shape_key: ShapeKey) -> bool:
+        return (model_id, tuple(shape_key)) in self.entries
+
+    def wcet(self, model_id: str, shape_key: ShapeKey, batch_size: int) -> float:
+        """Conservative WCET for a batch of ``batch_size`` frames."""
+        if batch_size <= 0:
+            return 0.0
+        key = (model_id, tuple(shape_key))
+        try:
+            table = self.entries[key]
+        except KeyError:
+            raise KeyError(
+                f"no profile for model={model_id} shape={shape_key}; "
+                f"profiled: {sorted(self.entries)}"
+            ) from None
+        if batch_size in table:
+            return table[batch_size] * self.capacity_scale
+        sizes = sorted(table)
+        pos = bisect.bisect_left(sizes, batch_size)
+        if pos < len(sizes):
+            # Round up to the next profiled batch size (conservative).
+            return table[sizes[pos]] * self.capacity_scale
+        # Beyond the table: linear extrapolation from the top two points
+        # (batching curves are ~affine in batch size at large batch).
+        if len(sizes) == 1:
+            per = table[sizes[-1]] / sizes[-1]
+            return per * batch_size * self.capacity_scale
+        b1, b2 = sizes[-2], sizes[-1]
+        t1, t2 = table[b1], table[b2]
+        slope = max((t2 - t1) / (b2 - b1), 0.0)
+        return (t2 + slope * (batch_size - b2)) * self.capacity_scale
+
+    def wcet_for(self, category: Category, batch_size: int) -> float:
+        return self.wcet(category.model_id, category.shape_key, batch_size)
+
+    def wcet_optimistic(
+        self, model_id: str, shape_key: ShapeKey, batch_size: int
+    ) -> float:
+        """Piecewise-linear interpolated execution time (NOT rounded up).
+
+        Used only by the Phase-1 utilization filter, which by design must
+        *underestimate* load (paper §4.2: Phase 1 may over-admit but must
+        not reject feasible requests); the conservative ``wcet`` would
+        inflate Ũ at unprofiled batch sizes and cause false rejects.
+        Admission safety is unaffected — Phase 2 always runs ``wcet``.
+        """
+        if batch_size <= 0:
+            return 0.0
+        key = (model_id, tuple(shape_key))
+        table = self.entries[key]
+        if batch_size in table:
+            return table[batch_size] * self.capacity_scale
+        sizes = sorted(table)
+        pos = bisect.bisect_left(sizes, batch_size)
+        if pos == 0:
+            per = table[sizes[0]] / sizes[0]
+            return per * batch_size * self.capacity_scale
+        if pos == len(sizes):
+            return self.wcet(model_id, shape_key, batch_size)  # extrapolation
+        b1, b2 = sizes[pos - 1], sizes[pos]
+        t1, t2 = table[b1], table[b2]
+        frac = (batch_size - b1) / (b2 - b1)
+        return (t1 + frac * (t2 - t1)) * self.capacity_scale
+
+    def max_profiled_batch(self, model_id: str, shape_key: ShapeKey) -> int:
+        return max(self.entries[(model_id, tuple(shape_key))])
+
+    def scaled(self, factor: float) -> "ProfileTable":
+        """A view of this table with capacity degraded by ``factor`` >= 1."""
+        return ProfileTable(entries=self.entries, capacity_scale=self.capacity_scale * factor)
+
+    # -- persistence ---------------------------------------------------
+    def to_json(self) -> str:
+        blob = {
+            "capacity_scale": self.capacity_scale,
+            "entries": [
+                {
+                    "model_id": model_id,
+                    "shape_key": list(shape_key),
+                    "table": {str(b): t for b, t in table.items()},
+                }
+                for (model_id, shape_key), table in sorted(self.entries.items())
+            ],
+        }
+        return json.dumps(blob, indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ProfileTable":
+        blob = json.loads(text)
+        table = cls(capacity_scale=blob.get("capacity_scale", 1.0))
+        for e in blob["entries"]:
+            for b, t in e["table"].items():
+                table.record(e["model_id"], tuple(e["shape_key"]), int(b), float(t))
+        return table
+
+
+class MeasuredProfiler:
+    """The paper's offline profiler: run each config repeatedly, take p99."""
+
+    def __init__(self, warmup: int = 2, runs: int = 20, quantile: float = 0.99):
+        self.warmup = warmup
+        self.runs = runs
+        self.quantile = quantile
+
+    def profile(
+        self,
+        table: ProfileTable,
+        model_id: str,
+        shape_key: ShapeKey,
+        batch_sizes: List[int],
+        step_fn: Callable[[int], None],
+    ) -> None:
+        """``step_fn(batch_size)`` must execute one full batched step
+        synchronously (for JAX: call ``.block_until_ready()`` inside)."""
+        for b in batch_sizes:
+            for _ in range(self.warmup):
+                step_fn(b)
+            samples = []
+            for _ in range(self.runs):
+                t0 = time.perf_counter()
+                step_fn(b)
+                samples.append(time.perf_counter() - t0)
+            samples.sort()
+            table.record(model_id, shape_key, b, _percentile(samples, self.quantile))
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants for the target accelerator (defaults: TPU v5e)."""
+
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    ici_bw: float = 50e9  # bytes/s per link
+    chips: int = 1
+
+    def step_time(
+        self, flops: float, hbm_bytes: float, collective_bytes: float
+    ) -> float:
+        """Roofline execution-time estimate for one step: the max of the
+        three terms (compute, memory, interconnect), each idealized."""
+        compute = flops / (self.chips * self.peak_flops)
+        memory = hbm_bytes / (self.chips * self.hbm_bw)
+        collective = collective_bytes / (self.chips * self.ici_bw)
+        return max(compute, memory, collective)
+
+
+class AnalyticProfiler:
+    """WCET from compiled-program roofline terms.
+
+    ``cost_fn(batch_size) -> (flops, hbm_bytes, collective_bytes)`` is
+    typically backed by ``repro.roofline.analysis`` over a dry-run lowering.
+    ``calibration`` maps idealized roofline time to achievable WCET
+    (>= 1; e.g. 1/0.6 if the program historically reaches 60% of roofline).
+    """
+
+    def __init__(self, hardware: HardwareSpec, calibration: float = 1.5):
+        if calibration < 1.0:
+            raise ValueError("calibration must be >= 1 (WCET cannot beat roofline)")
+        self.hardware = hardware
+        self.calibration = calibration
+
+    def profile(
+        self,
+        table: ProfileTable,
+        model_id: str,
+        shape_key: ShapeKey,
+        batch_sizes: List[int],
+        cost_fn: Callable[[int], Tuple[float, float, float]],
+    ) -> None:
+        for b in batch_sizes:
+            flops, hbm, coll = cost_fn(b)
+            t = self.hardware.step_time(flops, hbm, coll) * self.calibration
+            table.record(model_id, shape_key, b, t)

@@ -1,0 +1,176 @@
+"""DeepRT: the assembled scheduler (paper Fig. 1).
+
+Wiring:
+
+  clients --requests--> AdmissionControl --admitted--> DisBatcher
+  DisBatcher --job instances--> EDFWorker(deadline queue) --> device
+  EDFWorker --overruns--> AdaptationModule --shape override--> DisBatcher
+
+The same object drives a virtual clock (simulation: benchmarks, admission
+accuracy studies) or a wall clock with a real execution backend (live
+serving over jit-compiled JAX steps — see ``serving/batcher_bridge.py``).
+
+Non-real-time requests (paper §3.3): bypass the admission test, use the
+large DisBatcher window (low deadline priority under EDF), carry an
+imposed minimum period, and have a batch-size cap so a non-RT job cannot
+block RT jobs for long (non-preemptive blocking is bounded by one job).
+The Phase-2 imitator start time already covers in-flight blocking because
+the device's busy-until is part of the recorded system state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.adaptation import AdaptationModule, default_shrink
+from repro.core.admission import AdmissionControl, AdmissionResult, snapshot_from_scheduler
+from repro.core.disbatcher import DisBatcher
+from repro.core.edf import EDFWorker
+from repro.core.profiler import ProfileTable
+from repro.core.request import Category, Frame, JobInstance, Request
+from repro.core.simulator import EventLoop, Metrics, SequentialDevice
+
+NONRT_MIN_PERIOD = 1.0  # imposed arrival period for non-RT requests (§3.3)
+NONRT_BATCH_CAP = 8  # bounds priority inversion from one non-RT job
+
+
+@dataclass
+class ExecutionModel:
+    """How "actual" execution time is produced.
+
+    simulation: ``actual_fn(job, profiled_wcet) -> seconds``. Defaults to
+    a deterministic 0.97x of profiled WCET (profiles are p99, reality sits
+    just below). Benchmarks override this with samplers / overrun
+    injectors; live serving replaces the whole worker exec path.
+    """
+
+    actual_fn: Callable[[JobInstance, float], float] = (
+        lambda job, wcet: 0.97 * wcet
+    )
+
+
+class DeepRT:
+    def __init__(
+        self,
+        table: ProfileTable,
+        loop: Optional[EventLoop] = None,
+        execution: Optional[ExecutionModel] = None,
+        adaptation_enabled: bool = True,
+        shrink_fn=default_shrink,
+        utilization_bound: float = 1.0,
+        early_flush: bool = True,
+    ):
+        """``early_flush`` enables the paper's idle-device optimization
+        (§4.3). It is guarded (see DisBatcher.flush_early) so Theorem 1's
+        guarantee holds empirically (0 misses across 30k random workloads
+        / 2.6M frames), but it can perturb the EDF order relative to the
+        Phase-2 imitator's timeline by up to one job's non-preemptive
+        blocking, so per-frame latency *predictions* are only strictly
+        conservative with ``early_flush=False`` (strict mode)."""
+        self.loop = loop if loop is not None else EventLoop()
+        self.table = table
+        self.execution = execution if execution is not None else ExecutionModel()
+        self.utilization_bound = utilization_bound
+        self.early_flush = early_flush
+        self.metrics = Metrics()
+
+        self.device = SequentialDevice(self.loop, on_idle=self._on_device_idle)
+        self.worker = EDFWorker(
+            loop=self.loop,
+            device=self.device,
+            exec_time_fn=self._exec_time,
+            profiled_fn=self._profiled,
+            metrics=self.metrics,
+            request_idle_work=self._idle_flush,
+            next_rt_release_fn=lambda: self.disbatcher.earliest_next_joint(
+                realtime_only=True
+            ),
+        )
+        self.disbatcher = DisBatcher(self.loop, emit=self.worker.submit)
+        self.admission = AdmissionControl(table)
+        self.adaptation = AdaptationModule(
+            table, self.disbatcher, shrink_fn=shrink_fn, enabled=adaptation_enabled
+        )
+        self.worker.on_job_complete = self.adaptation.on_job_complete
+        self.admitted: List[Request] = []
+        self.rejected: List[Request] = []
+
+    # ----- execution-time plumbing ---------------------------------------
+    def _profiled(self, job: JobInstance) -> float:
+        return self.table.wcet(job.category.model_id, job.shape_key, job.batch_size)
+
+    def _exec_time(self, job: JobInstance) -> float:
+        return self.execution.actual_fn(job, self._profiled(job))
+
+    def _on_device_idle(self) -> None:
+        self.worker.on_device_idle()
+
+    def _idle_flush(self) -> bool:
+        if not self.early_flush:
+            return False
+        return self.disbatcher.flush_early(
+            wcet_fn=lambda cat, shape, b: self.table.wcet(cat.model_id, shape, b)
+        )
+
+    # ----- client API ------------------------------------------------------
+    def submit_request(self, request: Request) -> AdmissionResult:
+        """Admission-test a pending request at the current time; admit on
+        success. ``request.start_time`` below now is clamped to now."""
+        now = self.loop.now
+        if request.start_time < now:
+            request.start_time = now
+        if not request.category.realtime:
+            request.period = max(request.period, NONRT_MIN_PERIOD)
+            self._admit(request)
+            return AdmissionResult(admitted=True, phase=0, utilization=0.0,
+                                   reason="non-RT: admission bypassed")
+        state = snapshot_from_scheduler(
+            now=now,
+            disbatcher=self.disbatcher,
+            queued_jobs=self.worker.queue.snapshot(),
+            device_free_at=self.device.busy_until or now,
+            table=self.table,
+            pending=request,
+        )
+        result = self.admission.admit(state, self.utilization_bound)
+        if result.admitted:
+            self._admit(request)
+        else:
+            self.rejected.append(request)
+        return result
+
+    def _admit(self, request: Request) -> None:
+        self.admitted.append(request)
+        self.disbatcher.add_request(request)
+        cap = None if request.category.realtime else NONRT_BATCH_CAP
+        for i in range(request.n_frames):
+            arrival = request.frame_arrival(i)
+            self.loop.schedule(
+                arrival,
+                self._make_arrival(request, i, cap),
+                priority=getattr(self.loop, "PRIO_ARRIVAL", 0),
+            )
+
+    def _make_arrival(self, request: Request, index: int, batch_cap: Optional[int]):
+        def _arrive() -> None:
+            frame = Frame(
+                request_id=request.request_id,
+                category=request.category,
+                index=index,
+                arrival_time=self.loop.now,
+                deadline=self.loop.now + request.relative_deadline,
+            )
+            self.disbatcher.on_frame(frame)
+            if batch_cap is not None:
+                pending = self.disbatcher.pending_frames(request.category)
+                if len(pending) >= batch_cap:
+                    self.disbatcher._flush(request.category, self.loop.now)
+            # Non-idling: an idle device should not sit on waiting frames.
+            if self.device.idle and not self.worker.queue:
+                self.worker.on_device_idle()
+        return _arrive
+
+    # ----- run --------------------------------------------------------------
+    def run(self, until: Optional[float] = None) -> Metrics:
+        self.loop.run(until)
+        return self.metrics

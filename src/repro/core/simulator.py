@@ -1,0 +1,330 @@
+"""Discrete-event simulation engine.
+
+Three roles in the reproduction:
+
+1. Virtual clock for the DeepRT scheduler and every baseline, so the
+   paper's trace experiments (Figs 4/5/7/10) run deterministically and
+   orders of magnitude faster than wall time.
+2. The device models: ``SequentialDevice`` (a TPU core: one program at a
+   time — also how DeepRT drives a GPU) and ``ProcessorSharingDevice``
+   (CUDA time-sliced context multiplexing, reproducing the paper's Fig 2a
+   linear-slowdown observation; used only by the concurrent baselines and
+   the §2 characterization benchmark).
+3. Wall-clock mode: ``WallClock`` swaps in for real serving; the scheduler
+   code is identical.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time as _time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+class EventLoop:
+    """Heap-based virtual-time event loop.
+
+    Events at the SAME timestamp execute in (priority, insertion) order.
+    Priorities make same-instant semantics deterministic and independent
+    of insertion order — crucial at window-joint boundaries:
+
+      PRIO_ARRIVAL(0) < PRIO_COMPLETE(1) < PRIO_JOINT(2) < PRIO_DISPATCH(3)
+
+    A frame arriving exactly at a window joint therefore joins the window
+    that closes at that instant, and the EDF worker only picks its next
+    job (PRIO_DISPATCH) after ALL same-instant releases have been pushed —
+    the same conventions the Phase-2 EDF imitator uses (it releases every
+    job with release <= t before popping).
+    """
+
+    PRIO_ARRIVAL = 0
+    PRIO_COMPLETE = 1
+    PRIO_JOINT = 2
+    PRIO_DISPATCH = 3
+
+    def __init__(self, start: float = 0.0):
+        self._now = start
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._cancelled: set = set()
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def schedule(
+        self, when: float, fn: Callable[[], None], priority: int = 1
+    ) -> int:
+        if when < self._now - 1e-12:
+            raise ValueError(f"cannot schedule in the past: {when} < {self._now}")
+        eid = next(self._seq)
+        heapq.heappush(self._heap, (max(when, self._now), priority, eid, fn))
+        return eid
+
+    def schedule_in(
+        self, delay: float, fn: Callable[[], None], priority: int = 1
+    ) -> int:
+        return self.schedule(self._now + delay, fn, priority)
+
+    def cancel(self, event_id: int) -> None:
+        self._cancelled.add(event_id)
+
+    def run(self, until: Optional[float] = None) -> None:
+        while self._heap:
+            when, _prio, eid, fn = self._heap[0]
+            if until is not None and when > until:
+                break
+            heapq.heappop(self._heap)
+            if eid in self._cancelled:
+                self._cancelled.discard(eid)
+                continue
+            self._now = when
+            fn()
+        if until is not None and until > self._now:
+            self._now = until
+
+    def peek_time(self) -> Optional[float]:
+        while self._heap and self._heap[0][2] in self._cancelled:
+            _, _, eid, _ = heapq.heappop(self._heap)
+            self._cancelled.discard(eid)
+        return self._heap[0][0] if self._heap else None
+
+
+class WallClock:
+    """Wall-clock stand-in with the same scheduling interface.
+
+    Used by the live serving path (examples/serve_multitenant.py). ``run``
+    blocks on real time; callbacks execute in-thread.
+    """
+
+    PRIO_ARRIVAL = 0
+    PRIO_COMPLETE = 1
+    PRIO_JOINT = 2
+    PRIO_DISPATCH = 3
+
+    def __init__(self):
+        self._t0 = _time.perf_counter()
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._cancelled: set = set()
+
+    @property
+    def now(self) -> float:
+        return _time.perf_counter() - self._t0
+
+    def schedule(self, when: float, fn: Callable[[], None], priority: int = 1) -> int:
+        eid = next(self._seq)
+        heapq.heappush(self._heap, (when, priority, eid, fn))
+        return eid
+
+    def schedule_in(self, delay: float, fn: Callable[[], None], priority: int = 1) -> int:
+        return self.schedule(self.now + delay, fn, priority)
+
+    def cancel(self, event_id: int) -> None:
+        self._cancelled.add(event_id)
+
+    def run(self, until: Optional[float] = None) -> None:
+        while self._heap:
+            when, _prio, eid, fn = self._heap[0]
+            if until is not None and when > until:
+                break
+            now = self.now
+            if when > now:
+                _time.sleep(min(when - now, 0.05))
+                continue
+            heapq.heappop(self._heap)
+            if eid in self._cancelled:
+                self._cancelled.discard(eid)
+                continue
+            fn()
+
+
+@dataclass
+class _Active:
+    job: object
+    work: float  # remaining isolated-execution seconds
+    on_complete: Callable[[object, float], None]
+    job_bytes: float = 0.0
+
+
+class SequentialDevice:
+    """One program at a time — a TPU core, or DeepRT's view of the GPU.
+
+    ``submit`` is only legal when idle; the caller (the EDF worker)
+    enforces non-preemptive sequential execution.
+    """
+
+    def __init__(self, loop: EventLoop, on_idle: Optional[Callable[[], None]] = None):
+        self.loop = loop
+        self.on_idle = on_idle
+        self._busy_until: Optional[float] = None
+        self.busy_time = 0.0  # total seconds spent executing
+        self.resident_bytes = 0.0  # live batch buffers (Fig 6 benchmark)
+        self.peak_bytes = 0.0
+
+    @property
+    def idle(self) -> bool:
+        return self._busy_until is None
+
+    @property
+    def busy_until(self) -> Optional[float]:
+        return self._busy_until
+
+    def submit(
+        self,
+        job: object,
+        exec_time: float,
+        on_complete: Callable[[object, float], None],
+        job_bytes: float = 0.0,
+    ) -> None:
+        if not self.idle:
+            raise RuntimeError("SequentialDevice is busy; EDF worker bug")
+        start = self.loop.now
+        self._busy_until = start + exec_time
+        self.busy_time += exec_time
+        self.resident_bytes += job_bytes
+        self.peak_bytes = max(self.peak_bytes, self.resident_bytes)
+
+        def _done() -> None:
+            self._busy_until = None
+            self.resident_bytes -= job_bytes
+            on_complete(job, self.loop.now)
+            if self.on_idle is not None:
+                self.on_idle()
+
+        self.loop.schedule(start + exec_time, _done, priority=EventLoop.PRIO_COMPLETE)
+
+
+class ProcessorSharingDevice:
+    """CUDA time-sliced context multiplexing (paper §2.2, Fig 2a).
+
+    k concurrently resident jobs each progress at rate 1/k: a job whose
+    isolated execution time is w completes after accumulating w seconds of
+    service. This reproduces the paper's measured linear growth of
+    execution time with concurrency. Used by the AIMD / BATCH /
+    BATCH-Delay baselines, which execute categories concurrently, and by
+    the §2 characterization benchmark.
+    """
+
+    def __init__(self, loop: EventLoop, interference: float = 1.0):
+        # interference > 1 models cross-model slowdown beyond pure
+        # time-slicing (paper Table 1 shows >k slowdowns for some pairs).
+        self.loop = loop
+        self.interference = interference
+        self._active: List[_Active] = []
+        self._last_update = 0.0
+        self._completion_event: Optional[int] = None
+        self.busy_time = 0.0
+        self.peak_bytes = 0.0
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    def _rate(self) -> float:
+        k = len(self._active)
+        if k == 0:
+            return 0.0
+        if k == 1:
+            return 1.0
+        return 1.0 / (k * self.interference)
+
+    def _drain(self) -> None:
+        now = self.loop.now
+        dt = now - self._last_update
+        if dt > 0 and self._active:
+            r = self._rate()
+            for a in self._active:
+                a.work -= dt * r
+            self.busy_time += dt
+        self._last_update = now
+
+    def _reschedule(self) -> None:
+        if self._completion_event is not None:
+            self.loop.cancel(self._completion_event)
+            self._completion_event = None
+        if not self._active:
+            return
+        r = self._rate()
+        nxt = min(self._active, key=lambda a: a.work)
+        eta = max(nxt.work, 0.0) / r
+        self._completion_event = self.loop.schedule_in(eta, self._complete_front)
+
+    def _complete_front(self) -> None:
+        self._drain()
+        self._completion_event = None
+        done = [a for a in self._active if a.work <= 1e-12]
+        self._active = [a for a in self._active if a.work > 1e-12]
+        for a in done:
+            a.on_complete(a.job, self.loop.now)
+        self._reschedule()
+
+    def submit(
+        self,
+        job: object,
+        exec_time: float,
+        on_complete: Callable[[object, float], None],
+        job_bytes: float = 0.0,
+    ) -> None:
+        self._drain()
+        self._active.append(_Active(job, exec_time, on_complete, job_bytes))
+        self.peak_bytes = max(
+            self.peak_bytes, sum(a.job_bytes for a in self._active)
+        )
+        self._reschedule()
+
+
+@dataclass
+class Metrics:
+    """Per-run metrics shared by DeepRT and all baselines."""
+
+    completed_frames: int = 0
+    missed_frames: int = 0
+    overdue_times: List[float] = field(default_factory=list)
+    frame_latencies: List[float] = field(default_factory=list)
+    job_count: int = 0
+    batch_sizes: List[int] = field(default_factory=list)
+    overruns: int = 0
+    first_arrival: Optional[float] = None
+    last_completion: float = 0.0
+    peak_resident_bytes: float = 0.0
+    # (request_id, frame_index) -> (arrival, deadline, completion)
+    frame_records: Dict = field(default_factory=dict)
+
+    def record_frame(self, frame) -> None:
+        self.completed_frames += 1
+        if self.first_arrival is None or frame.arrival_time < self.first_arrival:
+            self.first_arrival = frame.arrival_time
+        self.last_completion = max(self.last_completion, frame.completion_time)
+        self.frame_latencies.append(frame.latency)
+        self.frame_records[(frame.request_id, frame.index)] = (
+            frame.arrival_time,
+            frame.deadline,
+            frame.completion_time,
+        )
+        if frame.missed:
+            self.missed_frames += 1
+            self.overdue_times.append(frame.overdue)
+
+    def record_job(self, batch_size: int) -> None:
+        self.job_count += 1
+        self.batch_sizes.append(batch_size)
+
+    @property
+    def miss_rate(self) -> float:
+        if self.completed_frames == 0:
+            return 0.0
+        return self.missed_frames / self.completed_frames
+
+    @property
+    def throughput(self) -> float:
+        """Completed frames per second of makespan."""
+        if self.completed_frames == 0 or self.first_arrival is None:
+            return 0.0
+        span = self.last_completion - self.first_arrival
+        return self.completed_frames / span if span > 0 else float("inf")
+
+    @property
+    def mean_batch(self) -> float:
+        return sum(self.batch_sizes) / len(self.batch_sizes) if self.batch_sizes else 0.0

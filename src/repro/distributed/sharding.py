@@ -1,0 +1,226 @@
+"""Logical-axis sharding rules engine.
+
+Every parameter/cache/activation dim carries a *logical* axis name
+(assigned in the model zoo's Param specs and ``constrain`` calls). This
+module maps logical axes to mesh axes with an ordered-candidate,
+divisibility-aware assignment:
+
+  for each array dim, in order:
+      for each candidate mesh axis of its logical name, in order:
+          accept if (a) the axis is unused so far in this array and
+                    (b) the dim size divides by the accumulated product
+
+The fallback behaviour this buys is what makes ONE rule set serve all
+10 architectures and all 4 input shapes:
+
+- GQA kv_heads=8 on a model=16 axis fails divisibility, so the kv cache
+  falls through to sharding head_dim on model (contraction-dim sharding;
+  GSPMD inserts the per-layer logits all-reduce);
+- mixtral's 8 experts fail on model=16, so expert FFN weights fall
+  through to TP inside each expert (d_ff on model);
+- long_500k's batch=1 cannot shard, so the KV cache falls through to
+  sequence sharding on data — context parallelism for free;
+- whisper's 20 MHA heads fail on model=16 -> head_dim sharding.
+
+Rule sets differ for params (FSDP: embed dims sharded over data/pod),
+activations (batch over pod+data), and caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+LogicalAxes = Tuple[Optional[str], ...]
+
+# Candidate mesh axes per logical axis, in priority order.
+PARAM_RULES: Dict[Optional[str], List[str]] = {
+    "layer": [],
+    "embed": ["data", "pod"],  # FSDP / ZeRO-3 style weight sharding
+    "embed2": [],
+    "vocab": ["model"],
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "head_dim": ["model"],
+    "mlp": ["model"],
+    "mlp2": [],
+    "expert": ["model"],
+    "heads_flat": ["model"],
+    "capacity": [],
+    None: [],
+}
+
+ACT_RULES: Dict[Optional[str], List[str]] = {
+    "batch": ["pod", "data"],
+    "seq": [],
+    "embed": [],
+    "expert": ["model"],
+    "heads": ["model"],
+    "capacity": [],
+    None: [],
+}
+
+CACHE_RULES: Dict[Optional[str], List[str]] = {
+    "layer": [],
+    "batch": ["pod", "data"],
+    "seq": ["data", "pod"],  # context parallelism when batch can't shard
+    "kv_heads": ["model"],
+    "head_dim": ["model"],
+    "heads": ["model"],
+    "embed": ["model"],
+    None: [],
+}
+
+
+def spec_for_shape(
+    shape: Sequence[int],
+    axes: LogicalAxes,
+    mesh: Mesh,
+    rules: Dict[Optional[str], List[str]],
+) -> PartitionSpec:
+    """Assign mesh axes to dims (ordered candidates + divisibility)."""
+    used: set = set()
+    out: List[Any] = []
+    for dim, name in zip(shape, axes):
+        chosen: List[str] = []
+        prod = 1
+        for cand in rules.get(name, []):
+            if cand in used or cand not in mesh.shape:
+                continue
+            size = mesh.shape[cand]
+            if dim % (prod * size) == 0:
+                chosen.append(cand)
+                used.add(cand)
+                prod *= size
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(tuple(chosen))
+    # Trim trailing Nones (canonical PartitionSpec form).
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def tree_shardings(
+    shape_tree: Any,
+    axes_tree: Any,
+    mesh: Mesh,
+    rules: Dict[Optional[str], List[str]] = PARAM_RULES,
+) -> Any:
+    """NamedSharding tree for a tree of arrays/ShapeDtypeStructs given the
+    matching tree of logical-axes tuples."""
+
+    def one(leaf, axes):
+        return NamedSharding(
+            mesh, spec_for_shape(leaf.shape, axes, mesh, rules)
+        )
+
+    return jax.tree.map(
+        one, shape_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+# Cache trees don't carry Param specs; derive logical axes from shapes by
+# kind (see models/kvcache.py layouts).
+def cache_axes(cfg, stacked: bool) -> Dict[str, LogicalAxes]:
+    lead: LogicalAxes = ("layer",) if stacked else ()
+    return {
+        "k": lead + ("batch", "seq", "kv_heads", "head_dim"),
+        "v": lead + ("batch", "seq", "kv_heads", "head_dim"),
+        "pos": lead + ("batch", "seq"),
+        "h": lead + ("batch", "mlp"),
+        "conv": lead + ("batch", None, "mlp"),
+        "shift": lead + ("batch", "embed"),
+        "wkv": lead + ("batch", "heads", None, None),
+        "channel": lead + ("batch", "embed"),
+        "self_k": lead + ("batch", "seq", "kv_heads", "head_dim"),
+        "self_v": lead + ("batch", "seq", "kv_heads", "head_dim"),
+        "cross_k": lead + ("batch", "seq", "kv_heads", "head_dim"),
+        "cross_v": lead + ("batch", "seq", "kv_heads", "head_dim"),
+    }
+
+
+def cache_shardings(cache_tree: Any, cfg, mesh: Mesh) -> Any:
+    """Shardings for a decode cache pytree (dict-of-lists-of-dicts)."""
+
+    def walk(node, stacked):
+        if isinstance(node, dict) and any(
+            k in node for k in ("k", "h", "shift", "self_k")
+        ):
+            table = cache_axes(cfg, stacked)
+            out = {}
+            for name, leaf in node.items():
+                axes = table[name][: len(leaf.shape)]
+                # wkv state rank differs (B,H,K,V); clip handled above.
+                if name == "wkv":
+                    axes = (("layer",) if stacked else ()) + (
+                        "batch", "heads", None, None,
+                    )
+                out[name] = NamedSharding(
+                    mesh, spec_for_shape(leaf.shape, axes, mesh, CACHE_RULES)
+                )
+            return out
+        if isinstance(node, dict):
+            return {k: walk(v, stacked) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, stacked) for v in node]
+        raise TypeError(type(node))
+
+    if "self_k" in cache_tree:  # encdec cache: flat dict, layer-stacked
+        return walk(cache_tree, stacked=True)
+    out = {}
+    for key, sub in cache_tree.items():
+        out[key] = walk(sub, stacked=(key == "super"))
+    return out
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def rule_overrides(param=None, act=None, cache=None):
+    """Temporarily override logical-axis rule entries — the mechanism
+    behind the dry-run's named optimization variants (EXPERIMENTS.md
+    §Perf). Example: rule_overrides(act={"seq": ["model"]}) turns on
+    sequence parallelism for activations."""
+    saved = []
+    for rules, upd in ((PARAM_RULES, param), (ACT_RULES, act), (CACHE_RULES, cache)):
+        if not upd:
+            continue
+        for k, v in upd.items():
+            saved.append((rules, k, rules.get(k, None), k in rules))
+            rules[k] = v
+    try:
+        yield
+    finally:
+        for rules, k, old, existed in reversed(saved):
+            if existed:
+                rules[k] = old
+            else:
+                rules.pop(k, None)
+
+
+def install_activation_resolver(mesh: Mesh) -> None:
+    """Route models.sharding_hooks.constrain through this mesh."""
+    from repro.models import sharding_hooks
+
+    def resolver(x, axes):
+        spec = spec_for_shape(x.shape, axes, mesh, ACT_RULES)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    sharding_hooks.set_resolver(resolver)
+
+
+def clear_activation_resolver() -> None:
+    from repro.models import sharding_hooks
+
+    sharding_hooks.clear_resolver()

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the serving hot spots (flash_attention,
+decode_attention, rglru, wkv6) - each with ops.py jitted wrappers and
+ref.py pure-jnp oracles; tests sweep shapes/dtypes in interpret mode."""

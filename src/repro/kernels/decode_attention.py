@@ -1,0 +1,152 @@
+"""Decode (single-token) attention Pallas TPU kernel — flash-decoding.
+
+One new token per sequence attends to its full (or ring) KV cache.
+Schedule: grid (batch, kv_heads, kv_blocks); the G = H/KV query heads of
+one kv head are processed together as a (G, D) tile (G is small for GQA,
+so this keeps the MXU busy with a (G, D) x (D, bk) matmul instead of G
+vector-matrix products). Online-softmax state (m, l, acc) lives in VMEM
+scratch across kv blocks; output written on the last block.
+
+Masking is fully position-driven: the caller passes per-slot absolute
+positions and a validity bitmap, so full caches, ring (sliding-window)
+caches, and continuous-batching caches with per-sequence cursors all use
+the same kernel.
+
+The serving engine's decode hot loop is THE perf-critical path of the
+DeepRT reproduction (batched decode job instances are what the GPU/TPU
+executes most of the time), which is why this kernel exists.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, 1, G, D)
+    k_ref,  # (1, bk, 1, D)
+    v_ref,
+    cursor_ref,  # (1, 1) int32
+    pos_ref,  # (1, bk) int32
+    valid_ref,  # (1, bk) int32 (0/1)
+    o_ref,  # (1, 1, G, D)
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    window: Optional[int],
+    n_kv_blocks: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :, :]  # (G, D)
+    k = k_ref[0, :, 0, :]  # (bk, D)
+    v = v_ref[0, :, 0, :]
+    cursor = cursor_ref[0, 0]
+    pos = pos_ref[0, :]  # (bk,)
+    valid = valid_ref[0, :] != 0
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, bk)
+    mask = jnp.logical_and(pos <= cursor, valid)
+    if window is not None:
+        mask = jnp.logical_and(mask, pos > cursor - window)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _write():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_k", "interpret")
+)
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    cache_k: jax.Array,  # (B, S, KV, D)
+    cache_v: jax.Array,
+    cursor: jax.Array,  # (B,) int32
+    kv_pos: jax.Array,  # (B, S) int32
+    kv_valid: jax.Array,  # (B, S) bool
+    *,
+    window: Optional[int] = None,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, one, h, d = q.shape
+    s, kv = cache_k.shape[1], cache_k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    block_k = min(block_k, max(s, 8))
+    nk = math.ceil(s / block_k)
+    s_pad = nk * block_k
+    kp = jnp.pad(cache_k, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    vp = jnp.pad(cache_v, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    pp = jnp.pad(kv_pos, ((0, 0), (0, s_pad - s)), constant_values=2**30)
+    vv = jnp.pad(
+        kv_valid.astype(jnp.int32), ((0, 0), (0, s_pad - s))
+    )
+    # Layout: (B, KV, G, D) so one block = one kv-head's query group.
+    q_kv = q.reshape(b, kv, g, d)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        window=window,
+        n_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, k_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, k_: (b_, k_, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, k_: (b_, k_, h_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, k_: (b_, 0)),
+            pl.BlockSpec((1, block_k), lambda b_, h_, k_: (b_, k_)),
+            pl.BlockSpec((1, block_k), lambda b_, h_, k_: (b_, k_)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, k_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        q_kv,
+        kp,
+        vp,
+        cursor[:, None].astype(jnp.int32),
+        pp.astype(jnp.int32),
+        vv,
+    )
+    return out.reshape(b, 1, h, d)

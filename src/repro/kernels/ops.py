@@ -1,0 +1,78 @@
+"""Jitted dispatch wrappers for the Pallas kernels.
+
+The model code calls these (``cfg.impl == 'pallas'``); on a CPU backend
+they transparently run in interpret mode (the kernel bodies execute in
+Python for correctness validation), on TPU they compile to Mosaic.
+Wrappers own layout/padding plumbing so kernels stay minimal.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _decode
+from repro.kernels import flash_attention as _flash
+from repro.kernels import rglru as _rglru
+from repro.kernels import wkv6 as _wkv6
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    positions: Optional[jax.Array] = None,  # (B, S) — must be arange
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Prefill/training attention. The kernel assumes standard arange
+    positions (left-aligned prefill); callers with exotic position maps
+    use the XLA path instead."""
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window, interpret=_interpret()
+    )
+
+
+def decode_attention(
+    q: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    cursor: jax.Array,
+    kv_pos: jax.Array,
+    kv_valid: jax.Array,
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    return _decode.decode_attention(
+        q,
+        cache_k,
+        cache_v,
+        cursor,
+        kv_pos,
+        kv_valid,
+        window=window,
+        interpret=_interpret(),
+    )
+
+
+def rglru_scan(
+    a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    return _rglru.rglru_scan(a, b, h0, interpret=_interpret())
+
+
+def wkv6(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    return _wkv6.wkv6(r, k, v, w, u, state, interpret=_interpret())

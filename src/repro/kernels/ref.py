@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are validated against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose in
+interpret mode). They intentionally re-derive the math independently of
+the model code paths where practical.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Materialized-softmax attention with arange positions."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)
+    ) / math.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, D)
+    cache_k: jax.Array,  # (B, S, KV, D)
+    cache_v: jax.Array,
+    cursor: jax.Array,  # (B,) current absolute position
+    kv_pos: jax.Array,  # (B, S)
+    kv_valid: jax.Array,  # (B, S) bool
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    kv = cache_k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, d).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, cache_k.astype(jnp.float32)
+    ) / math.sqrt(d)
+    mask = (kv_pos <= cursor[:, None]) & kv_valid
+    if window is not None:
+        mask &= kv_pos > (cursor[:, None] - window)
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache_v.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def rglru_ref(
+    a: jax.Array,  # (B, S, D) decay in (0, 1)
+    b_in: jax.Array,  # (B, S, D) gated inputs
+    h0: Optional[jax.Array] = None,  # (B, D)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t."""
+    bsz, s, d = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d), jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (
+            a.transpose(1, 0, 2).astype(jnp.float32),
+            b_in.transpose(1, 0, 2).astype(jnp.float32),
+        ),
+    )
+    return hs.transpose(1, 0, 2).astype(a.dtype), h_last
+
+
+def wkv6_ref(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,  # (B, S, H, K)
+    v: jax.Array,  # (B, S, H, V)
+    w: jax.Array,  # (B, S, H, K) decay in (0, 1)
+    u: jax.Array,  # (H, K) bonus
+    state: Optional[jax.Array] = None,  # (B, H, K, V)
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(S, ins):
+        rt, kt, vt, wt = ins
+        kvt = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kvt)
+        return wt[..., :, None] * S + kvt, out
+
+    state, outs = jax.lax.scan(
+        step,
+        state.astype(jnp.float32),
+        (
+            r.transpose(1, 0, 2, 3).astype(jnp.float32),
+            k.transpose(1, 0, 2, 3).astype(jnp.float32),
+            v.transpose(1, 0, 2, 3).astype(jnp.float32),
+            w.transpose(1, 0, 2, 3).astype(jnp.float32),
+        ),
+    )
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), state

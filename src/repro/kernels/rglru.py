@@ -1,0 +1,113 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel (RecurrentGemma prefill).
+
+Computes h_t = a_t * h_{t-1} + b_t over time, channel-blocked.
+
+Schedule: grid (batch, d_blocks, t_blocks), time innermost (TPU grids are
+sequential, so the hidden state h carries across time blocks in VMEM
+scratch). Within a time block the recurrence is stepped with a fori_loop
+of fused multiply-adds over a (block_d,)-wide channel vector — VPU work.
+The gate/decay computation (sigmoids, matmuls) stays in XLA outside the
+kernel; the kernel owns exactly the sequential dependency, which is the
+part XLA cannot parallelize or fuse well.
+
+TPU adaptation note (DESIGN.md §2): GPU implementations of linear scans
+lean on warp shuffles for intra-warp prefix products; the TPU-native
+formulation is this chunked-carry schedule — HBM traffic is exactly one
+read of (a, b) and one write of h per element, making the kernel purely
+bandwidth-bound, which is the roofline optimum for a recurrence.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    a_ref,  # (1, bt, bd)
+    b_ref,
+    h0_ref,  # (1, bd)
+    o_ref,  # (1, bt, bd)
+    hlast_ref,  # (1, bd)
+    h_ref,  # scratch (bd,) f32
+    *,
+    block_t: int,
+    n_t_blocks: int,
+    seq_len: int,
+):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = h0_ref[0, :].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (bt, bd)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ti == n_t_blocks - 1)
+    def _write_state():
+        hlast_ref[0, :] = h_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_d", "interpret")
+)
+def rglru_scan(
+    a: jax.Array,  # (B, S, D) decay in (0, 1)
+    b: jax.Array,  # (B, S, D) inputs
+    h0: Optional[jax.Array] = None,  # (B, D)
+    *,
+    block_t: int = 128,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, s, d = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d), jnp.float32)
+    block_t = min(block_t, s)
+    block_d = min(block_d, d)
+    nt = math.ceil(s / block_t)
+    nd = math.ceil(d / block_d)
+    s_pad, d_pad = nt * block_t, nd * block_d
+    # Pad decays with 1 (identity) and inputs with 0 so padded time steps
+    # leave the state untouched.
+    ap = jnp.pad(a, ((0, 0), (0, s_pad - s), (0, d_pad - d)), constant_values=1.0)
+    bp = jnp.pad(b, ((0, 0), (0, s_pad - s), (0, d_pad - d)))
+    hp = jnp.pad(h0, ((0, 0), (0, d_pad - d)))
+
+    kernel = functools.partial(
+        _kernel, block_t=block_t, n_t_blocks=nt, seq_len=s
+    )
+    out, hlast = pl.pallas_call(
+        kernel,
+        grid=(bsz, nd, nt),
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda b_, d_, t_: (b_, t_, d_)),
+            pl.BlockSpec((1, block_t, block_d), lambda b_, d_, t_: (b_, t_, d_)),
+            pl.BlockSpec((1, block_d), lambda b_, d_, t_: (b_, d_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda b_, d_, t_: (b_, t_, d_)),
+            pl.BlockSpec((1, block_d), lambda b_, d_, t_: (b_, d_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s_pad, d_pad), a.dtype),
+            jax.ShapeDtypeStruct((bsz, d_pad), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d,), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp, hp)
+    return out[:, :s, :d], hlast[:, :d]

@@ -1,0 +1,121 @@
+"""RWKV-6 WKV Pallas TPU kernel (Finch time-mix recurrence).
+
+Per head, the matrix-valued state S (K x V) evolves as
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Schedule: grid (batch, heads, t_blocks), time innermost; S carries in
+VMEM scratch (K x V f32 — 64x64x4B = 16 KiB per head, trivially VMEM-
+resident). Within a time block each step is two rank-1 updates and a
+vector-matrix product on (K, V) tiles — K = V = 64 matches the MXU/VPU
+tile granularity of the head layout.
+
+The r/k/v/g/w projections, token-shift ddlerp and LoRA decay stay in XLA
+outside the kernel: they are batched matmuls XLA already schedules well.
+The kernel owns only the sequential state dependency.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    r_ref,  # (1, bt, 1, K)
+    k_ref,
+    v_ref,  # (1, bt, 1, V)
+    w_ref,  # (1, bt, 1, K)
+    u_ref,  # (1, K)
+    s0_ref,  # (1, 1, K, V) block of (B, H, K, V)
+    o_ref,  # (1, bt, 1, V)
+    slast_ref,  # (1, 1, K, V)
+    s_ref,  # scratch (K, V) f32
+    *,
+    block_t: int,
+    n_t_blocks: int,
+):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)  # (bt, K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (bt, V)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)  # (K,)
+
+    def step(t, S):
+        kv = k[t][:, None] * v[t][None, :]  # (K, V)
+        out = jnp.dot(
+            r[t][None, :], S + u[:, None] * kv,
+            preferred_element_type=jnp.float32,
+        )  # (1, V)
+        o_ref[0, t, 0, :] = out[0].astype(o_ref.dtype)
+        return w[t][:, None] * S + kv
+
+    S = jax.lax.fori_loop(0, block_t, step, s_ref[...])
+    s_ref[...] = S
+
+    @pl.when(ti == n_t_blocks - 1)
+    def _write_state():
+        slast_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def wkv6(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (B, S, H, V)
+    w: jax.Array,  # (B, S, H, K)
+    u: jax.Array,  # (H, K)
+    state: Optional[jax.Array] = None,  # (B, H, K, V)
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    block_t = min(block_t, s)
+    nt = math.ceil(s / block_t)
+    s_pad = nt * block_t
+    # Pad w with 1 (identity decay), k/v/r with 0: padded steps are no-ops.
+    rp = jnp.pad(r, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    wp = jnp.pad(
+        w, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)), constant_values=1.0
+    )
+    kernel = functools.partial(_kernel, block_t=block_t, n_t_blocks=nt)
+    out, slast = pl.pallas_call(
+        kernel,
+        grid=(b, h, nt),
+        in_specs=[
+            pl.BlockSpec((1, block_t, 1, dk), lambda b_, h_, t_: (b_, t_, h_, 0)),
+            pl.BlockSpec((1, block_t, 1, dk), lambda b_, h_, t_: (b_, t_, h_, 0)),
+            pl.BlockSpec((1, block_t, 1, dv), lambda b_, h_, t_: (b_, t_, h_, 0)),
+            pl.BlockSpec((1, block_t, 1, dk), lambda b_, h_, t_: (b_, t_, h_, 0)),
+            pl.BlockSpec((1, dk), lambda b_, h_, t_: (h_, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b_, h_, t_: (b_, h_, 0, 0)),
+        ],  # s0: (B, H, K, V)
+        out_specs=[
+            pl.BlockSpec((1, block_t, 1, dv), lambda b_, h_, t_: (b_, t_, h_, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b_, h_, t_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s_pad, h, dv), r.dtype),
+            jax.ShapeDtypeStruct((b, h, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(rp, kp, vp, wp, u, state)
+    return out[:, :s], slast

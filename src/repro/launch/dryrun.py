@@ -1,0 +1,371 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the
+device count on first initialization). 512 host-platform placeholder
+devices back both the 16x16 single-pod mesh and the 2x16x16 multi-pod
+mesh; programs are lowered and compiled (SPMD, per-device module) but
+NEVER executed — inputs are ShapeDtypeStructs, no allocation happens.
+
+Per cell this script records:
+  - compiled.memory_analysis()   (per-device argument/output/temp bytes)
+  - compiled.cost_analysis()     (per-device FLOPs / bytes accessed)
+  - collective bytes parsed from the optimized HLO
+  - the three roofline terms + dominant bottleneck (repro.roofline)
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/results
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k \
+      --opt seq_shard   # named optimization variants (EXPERIMENTS.md §Perf)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCHS, SHAPES, applicable_shapes, get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_for
+from repro.roofline import analysis as roofline
+from repro.training import train_loop
+
+DEC_LEN_TRAIN = 448  # whisper decoder length for the train shape
+ENC_LEN_DECODE = 1500  # whisper encoder frames for decode shapes
+
+
+# ---------------------------------------------------------------------------
+# Optimization variants (EXPERIMENTS.md §Perf) — applied as config/rule edits.
+# ---------------------------------------------------------------------------
+
+
+def apply_opt(cfg: ModelConfig, opt: Optional[str]) -> ModelConfig:
+    if not opt or opt == "baseline":
+        return cfg
+    for o in opt.split("+"):
+        if o == "no_remat":
+            cfg = dataclasses.replace(cfg, remat=False)
+        elif o == "remat":
+            cfg = dataclasses.replace(cfg, remat=True)
+        elif o == "moe_dense":
+            cfg = dataclasses.replace(cfg, moe_dense=True)
+        elif o in OPT_RULES or o == "moe_local":
+            pass  # rule/hook-level variant, applied in run_cell
+        else:
+            raise ValueError(f"unknown opt variant {o}")
+    return cfg
+
+
+# Named sharding-rule variants (EXPERIMENTS.md §Perf). Composable with
+# '+', e.g. --opt kv_replicate+seqpar.
+OPT_RULES: Dict[str, Dict[str, Dict]] = {
+    # H1: GQA/MHA kv_heads that don't divide the model axis fall back to
+    # head_dim sharding in the BASELINE, which shards the attention
+    # contraction dim and forces per-layer logits all-reduces. Variant:
+    # drop the fallback — replicate indivisible head projections instead.
+    "kv_replicate": {"param": {"head_dim": []}},
+    # H2: sequence parallelism — activations shard the sequence dim on
+    # the model axis (long-prefill archs whose heads can't use it).
+    "seqpar": {"act": {"seq": ["model"], "batch": ["pod", "data"]}},
+    # H3: decode activations shard d_model on data (batch tiny per step);
+    # turns FSDP weight all-gathers into small activation psums.
+    "decode_dshard": {
+        "act": {"batch": [], "embed": ["data"]},
+        "cache": {"batch": ["model", "pod", "data"], "seq": ["data", "pod"]},
+    },
+    # H4: decode cache sequence sharding on model axis (flash-decoding
+    # style distributed softmax).
+    "cache_seq_model": {
+        "cache": {"batch": ["pod", "data"], "seq": ["model"],
+                  "kv_heads": [], "head_dim": []},
+    },
+}
+
+
+def opt_rule_context(opt: Optional[str]):
+    merged = {"param": {}, "act": {}, "cache": {}}
+    if opt:
+        for o in opt.split("+"):
+            for kind, upd in OPT_RULES.get(o, {}).items():
+                merged[kind].update(upd)
+    return shd.rule_overrides(
+        param=merged["param"], act=merged["act"], cache=merged["cache"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins per (arch, shape)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(
+    cfg: ModelConfig, shape_name: str, mesh: Mesh
+) -> Tuple[Any, Any, Any, Any]:
+    """Returns (fn, abstract_args, in_shardings, out_shardings) ready for
+    jax.jit(fn, in_shardings=...).lower(*abstract_args)."""
+    spec = SHAPES[shape_name]
+    model = model_for(cfg)
+    S, B = spec.seq_len, spec.global_batch
+
+    def act_sh(shape, axes=None):
+        return train_loop.batch_sharding(mesh, shape, axes)
+
+    if spec.kind == "train":
+        tcfg = train_loop.TrainConfig()
+        step = train_loop.make_train_step(model, tcfg)
+        state = train_loop.abstract_state(model)
+        state_sh = train_loop.shardings_for_state(model, mesh)
+        if cfg.encdec:
+            batch = {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype),
+                "dec_tokens": jax.ShapeDtypeStruct((B, DEC_LEN_TRAIN), jnp.int32),
+            }
+            batch_sh = {
+                "frames": act_sh((B, S, cfg.d_model), ("batch", "seq", "embed")),
+                "dec_tokens": act_sh((B, DEC_LEN_TRAIN)),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            batch_sh = {"tokens": act_sh((B, S))}
+            if cfg.rope_kind == "mrope":
+                batch["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+                batch_sh["positions"] = act_sh((3, B, S), (None, "batch", "seq"))
+        return (
+            step,
+            (state, batch),
+            (state_sh, batch_sh),
+            (state_sh, None),
+        )
+
+    if spec.kind == "prefill":
+        params = model.abstract_params()
+        params_sh = shd.tree_shardings(params, model.axes(), mesh)
+        if cfg.encdec:
+
+            def prefill(params, frames, dec_tokens):
+                logits, _ = model.forward(params, frames, dec_tokens)
+                return logits[:, -1].argmax(-1)
+
+            args = (
+                params,
+                jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype),
+                jax.ShapeDtypeStruct((B, DEC_LEN_TRAIN), jnp.int32),
+            )
+            in_sh = (
+                params_sh,
+                act_sh((B, S, cfg.d_model), ("batch", "seq", "embed")),
+                act_sh((B, DEC_LEN_TRAIN)),
+            )
+            return prefill, args[0:1] + args[1:], in_sh, None
+        if cfg.rope_kind == "mrope":
+
+            def prefill(params, tokens, positions):
+                logits, _ = model.forward(params, tokens, positions)
+                return logits[:, -1].argmax(-1)
+
+            args = (
+                params,
+                jax.ShapeDtypeStruct((B, S), jnp.int32),
+                jax.ShapeDtypeStruct((3, B, S), jnp.int32),
+            )
+            in_sh = (
+                params_sh,
+                act_sh((B, S)),
+                act_sh((3, B, S), (None, "batch", "seq")),
+            )
+            return prefill, args, in_sh, None
+
+        def prefill(params, tokens):
+            logits, _ = model.forward(params, tokens)
+            return logits[:, -1].argmax(-1)
+
+        args = (params, jax.ShapeDtypeStruct((B, S), jnp.int32))
+        in_sh = (params_sh, act_sh((B, S)))
+        return prefill, args, in_sh, None
+
+    # decode shapes: one new token against a seq_len cache (serve_step)
+    params = model.abstract_params()
+    params_sh = shd.tree_shardings(params, model.axes(), mesh)
+    if cfg.encdec:
+        cache = model.init_cache(B, S, enc_len=ENC_LEN_DECODE, abstract=True)
+        cache_sh = shd.cache_shardings(cache, cfg, mesh)
+
+        def serve_step(params, cache, token, cursor):
+            return model.decode_step(params, cache, token, cursor)
+
+        args = (
+            params,
+            cache,
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        )
+        in_sh = (params_sh, cache_sh, act_sh((B,)), act_sh((B,)))
+        out_sh = (None, cache_sh)
+        return serve_step, args, in_sh, out_sh
+    cache = model.init_cache(B, S, abstract=True)
+    cache_sh = shd.cache_shardings(cache, cfg, mesh)
+
+    def serve_step(params, cache, token, cursor):
+        return model.decode_step(params, cache, token, cursor)
+
+    args = (
+        params,
+        cache,
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+    in_sh = (params_sh, cache_sh, act_sh((B,)), act_sh((B,)))
+    out_sh = (None, cache_sh)
+    return serve_step, args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    opt: Optional[str] = None,
+) -> Dict[str, Any]:
+    cfg = apply_opt(get_config(arch), opt)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = SHAPES[shape_name]
+    t0 = time.time()
+    from repro.models import sharding_hooks
+
+    with mesh, opt_rule_context(opt):
+        shd.install_activation_resolver(mesh)
+        if opt and "moe_local" in opt:
+            sharding_hooks.set_moe_mesh(mesh)
+        try:
+            fn, args, in_sh, out_sh = input_specs(cfg, shape_name, mesh)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        finally:
+            shd.clear_activation_resolver()
+            sharding_hooks.clear_moe_mesh()
+
+    hlo = compiled.as_text()
+    mem = compiled.memory_analysis()
+    mem_stats = {}
+    if mem is not None:
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            if hasattr(mem, attr):
+                mem_stats[attr] = int(getattr(mem, attr))
+    model_flops = roofline.model_flops_for(
+        cfg, spec.kind, spec.seq_len, spec.global_batch
+    )
+    from repro.roofline.jaxpr_cost import costs_of
+
+    jflops, jbytes = costs_of(fn, *args)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    report = roofline.analyze(
+        compiled,
+        hlo,
+        model_flops_global=model_flops,
+        n_devices=mesh.size,
+        jaxpr_flops_global=jflops,
+        jaxpr_bytes_global=jbytes,
+    )
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "opt": opt or "baseline",
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_stats,
+        "roofline": report.to_dict(),
+        "xla_cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "note": "XLA counts while bodies ONCE (no trip count); kept "
+            "for reference only — roofline uses jaxpr/hlo_cost.",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", default=None, help="optimization variant")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in applicable_shapes(get_config(arch)):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch}_{shape}_{'multi' if multi else 'single'}"
+            if args.opt:
+                tag += f"_{args.opt}"
+            try:
+                result = run_cell(arch, shape, multi, args.opt)
+                r = result["roofline"]
+                print(
+                    f"OK   {tag}: compile={result['compile_s']}s "
+                    f"dominant={r['dominant']} "
+                    f"compute={r['compute_s']:.3e}s "
+                    f"memory={r['memory_s']:.3e}s "
+                    f"collective={r['collective_s']:.3e}s",
+                    flush=True,
+                )
+            except Exception as e:
+                failures += 1
+                result = {
+                    "arch": arch,
+                    "shape": shape,
+                    "mesh": "2x16x16" if multi else "16x16",
+                    "opt": args.opt or "baseline",
+                    "ok": False,
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-3000:],
+                }
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+            with open(os.path.join(args.out, f"{tag}.json"), "w") as f:
+                json.dump(result, f, indent=1)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches JAX device state (the dry-run must set XLA_FLAGS before any
+device query).
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the pod axis
+is the cross-DCI dimension (data parallelism / ZeRO across pods; the
+gradient-compression path targets exactly this axis).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate mesh over the real local device(s) — used by examples
+    and tests that want the sharded code path on CPU."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

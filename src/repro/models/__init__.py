@@ -1,0 +1,14 @@
+"""LM-family model zoo (pure functional JAX)."""
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecTransformer
+from repro.models.transformer import Transformer
+
+
+def model_for(cfg: ModelConfig):
+    """Instantiate the right model class for a config."""
+    if cfg.encdec:
+        return EncDecTransformer(cfg)
+    return Transformer(cfg)
+
+
+__all__ = ["ModelConfig", "Transformer", "EncDecTransformer", "model_for"]

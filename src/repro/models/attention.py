@@ -1,0 +1,394 @@
+"""Attention variants: GQA/MQA, causal, sliding-window, cross, decode.
+
+Three execution paths, selected by shape and config:
+
+- ``dense_attention``  — materialized-logits einsum attention. Used for
+  short sequences and as the numerical oracle everywhere.
+- ``flash_attention_xla`` — blocked online-softmax attention (q-chunk scan
+  over kv-chunk scan), pure jnp/lax. This is the long-context reference
+  path: it lowers with O(S·chunk) live memory instead of O(S²), so the
+  32k/500k dry-runs are compilable, and its HLO FLOPs reflect a real
+  flash-style schedule for the roofline. The Pallas TPU kernel
+  (repro.kernels.flash_attention) implements the same schedule with
+  explicit VMEM tiling; ``impl='pallas'`` dispatches to it.
+- ``swa_attention_xla`` — banded sliding-window attention: each query
+  chunk attends to a dynamically sliced KV band, giving true O(S·window)
+  compute (mixtral/gemma3-local/recurrentgemma-local layers).
+
+All paths share one mask convention: explicit integer positions for
+queries and keys, so prefill, decode-with-cache, and ring-buffer caches
+use the same code.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Param, apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    bias: bool = False,
+) -> Dict[str, Param]:
+    spec = {
+        "wq": Param((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": Param((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": Param((d_model, n_kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": Param((n_heads, head_dim, d_model), ("heads", "head_dim", "embed")),
+    }
+    if bias:
+        spec["bq"] = Param((n_heads, head_dim), ("heads", "head_dim"), init="zeros")
+        spec["bv"] = Param((n_kv_heads, head_dim), ("kv_heads", "head_dim"), init="zeros")
+        spec["bo"] = Param((d_model,), ("embed",), init="zeros")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Mask helper
+# ---------------------------------------------------------------------------
+
+
+def build_mask(
+    q_pos: jax.Array,  # (B, Sq)
+    kv_pos: jax.Array,  # (B, Skv)
+    kv_valid: Optional[jax.Array],  # (B, Skv) bool
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """(B, Sq, Skv) boolean mask — True = attend."""
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    mask = jnp.ones(q.shape[:2] + (kv_pos.shape[1],), bool)
+    if causal:
+        mask &= k <= q
+    if window is not None:
+        mask &= k > q - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Dense (oracle) path
+# ---------------------------------------------------------------------------
+
+
+def dense_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, KV, D)
+    v: jax.Array,  # (B, Skv, KV, D)
+    mask: jax.Array,  # (B, Sq, Skv) bool
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(d)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", probs, v, preferred_element_type=jnp.float32
+    )
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style XLA path (blocked online softmax)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_xla(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, KV, D)
+    v: jax.Array,
+    q_pos: jax.Array,  # (B, Sq)
+    kv_pos: jax.Array,  # (B, Skv)
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Blocked online-softmax attention, scanning over KV chunks ONLY.
+
+    The query sequence stays a full tensor dim — crucial for GSPMD: a
+    scan axis cannot be sharded, so chunking q would lock out sequence
+    parallelism (the earlier two-level-scan design measurably prevented
+    seq sharding — EXPERIMENTS.md §Perf iteration 2). Per-chunk live
+    memory is O(Sq * kv_chunk) logits + the (Sq, D) f32 accumulator,
+    sharded along Sq/batch by whatever GSPMD decides for the layer.
+    """
+    b, sq, h, d = q.shape
+    skv, kv_h = k.shape[1], k.shape[2]
+    g = h // kv_h
+    kv_chunk = min(kv_chunk, skv)
+    nk = math.ceil(skv / kv_chunk)
+    skv_pad = nk * kv_chunk
+    scale = 1.0 / math.sqrt(d)
+
+    kf = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    kp = jnp.pad(kv_pos, ((0, 0), (0, skv_pad - skv)), constant_values=2**30)
+
+    # Operands stay in model dtype (bf16 on TPU); contractions accumulate
+    # in f32 via preferred_element_type (MXU-native).
+    qg = q.reshape(b, sq, kv_h, g, d)
+    kf = kf.reshape(b, nk, kv_chunk, kv_h, d)
+    vf = vf.reshape(b, nk, kv_chunk, kv_h, d)
+    kp = kp.reshape(b, nk, kv_chunk)
+
+    def kv_step(carry, ki):
+        m, l, acc = carry  # (B, KV, G, Sq), ..., (B, KV, G, Sq, D)
+        kc, vc, kpc = ki  # (B, kvc, KV, D), ..., (B, kvc)
+        logits = (
+            jnp.einsum(
+                "bqkgd,bskd->bkgqs", qg, kc,
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )  # (B, KV, G, Sq, kvc) f32
+        mask = jnp.ones((b, sq, kv_chunk), bool)
+        if causal:
+            mask &= kpc[:, None, :] <= q_pos[:, :, None]
+        if window is not None:
+            mask &= kpc[:, None, :] > q_pos[:, :, None] - window
+        mask &= kpc[:, None, :] < 2**30  # padding
+        logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vc, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv_h, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv_h, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv_h, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        kv_step,
+        (m0, l0, a0),
+        (
+            kf.transpose(1, 0, 2, 3, 4),
+            vf.transpose(1, 0, 2, 3, 4),
+            kp.transpose(1, 0, 2),
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, Sq, D)
+    return (
+        out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Banded sliding-window path: O(S * window)
+# ---------------------------------------------------------------------------
+
+
+def swa_attention_xla(
+    q: jax.Array,  # (B, S, H, D) — self-attention over aligned positions
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    q_pos: jax.Array,  # (B, S)
+    window: int,
+    q_chunk: int = 512,
+) -> jax.Array:
+    """Causal sliding-window self-attention: each query chunk attends to
+    its static KV band, gathered up front — compute is O(S * (window +
+    q_chunk)) instead of O(S^2), and the chunk index stays a TENSOR dim
+    (not a scan axis) so GSPMD can shard the sequence (the earlier
+    scan-over-q-chunks version measurably blocked sequence parallelism —
+    EXPERIMENTS.md §Perf iteration 6)."""
+    b, s, h, d = q.shape
+    kv_h = k.shape[2]
+    g = h // kv_h
+    q_chunk = min(q_chunk, s)
+    nq = math.ceil(s / q_chunk)
+    s_pad = nq * q_chunk
+    band = min(
+        (math.ceil(window / q_chunk)) * q_chunk + q_chunk, s_pad
+    )  # static KV span per q chunk
+    lpad = band - q_chunk
+    scale = 1.0 / math.sqrt(d)
+
+    qf = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    # Left-pad KV by (band - q_chunk) so band windows never reach before 0;
+    # padded slots carry sentinel positions.
+    kf = jnp.pad(k, ((0, 0), (lpad, s_pad - s), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (lpad, s_pad - s), (0, 0), (0, 0)))
+    qp = jnp.pad(q_pos, ((0, 0), (0, s_pad - s)))
+    kp = jnp.pad(q_pos, ((0, 0), (lpad, s_pad - s)), constant_values=2**30)
+    kp = kp.at[:, :lpad].set(-(2**30))
+
+    # Banded gather: (nq, band) indices into the padded kv axis.
+    idx = (
+        jnp.arange(nq)[:, None] * q_chunk + jnp.arange(band)[None, :]
+    )  # chunk i covers padded kv slots [i*qc, i*qc + band)
+    kb = jnp.take(kf, idx, axis=1)  # (B, nq, band, KV, D)
+    vb = jnp.take(vf, idx, axis=1)
+    kpb = jnp.take(kp, idx, axis=1)  # (B, nq, band)
+    qg = qf.reshape(b, nq, q_chunk, kv_h, g, d)
+    qpb = qp.reshape(b, nq, q_chunk)
+
+    logits = (
+        jnp.einsum(
+            "bnqkgd,bnskd->bnkgqs", qg, kb, preferred_element_type=jnp.float32
+        )
+        * scale
+    )  # (B, nq, KV, G, qc, band) f32
+    mask = (kpb[:, :, None, :] <= qpb[:, :, :, None]) & (
+        kpb[:, :, None, :] > qpb[:, :, :, None] - window
+    )  # (B, nq, qc, band)
+    logits = jnp.where(mask[:, :, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bnkgqs,bnskd->bnqkgd", probs, vb, preferred_element_type=jnp.float32
+    )
+    out = out.reshape(b, s_pad, h, d)
+    return out[:, :s].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full multi-head attention layer (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def project_qkv(
+    p: Dict[str, jax.Array], x: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def project_out(p: Dict[str, jax.Array], o: jax.Array) -> jax.Array:
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+def mha(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S) or (3, B, S) for mrope
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    rope_theta: Optional[float] = 10000.0,
+    rope_kind: str = "rope",  # rope | mrope | none
+    impl: str = "xla",  # xla | dense | pallas
+    dense_threshold: int = 2048,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+) -> jax.Array:
+    """Self- (or cross-) attention over a full sequence (training/prefill)."""
+    q, k, v = project_qkv(p, x)
+    if kv_override is not None:
+        k, v = kv_override
+    pos1d = positions if positions.ndim == 2 else positions[0]
+    if rope_kind == "rope" and rope_theta is not None:
+        q = apply_rope(q, pos1d, rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, pos1d, rope_theta)
+    elif rope_kind == "mrope":
+        q = apply_mrope(q, positions, rope_theta)
+        if kv_override is None:
+            k = apply_mrope(k, positions, rope_theta)
+
+    s = x.shape[1]
+    skv = k.shape[1]
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        o = kernel_ops.flash_attention(
+            q, k, v, pos1d, causal=causal, window=window
+        )
+    elif impl == "dense" or (s <= dense_threshold and skv <= dense_threshold):
+        kv_pos = pos1d if kv_override is None else (
+            jnp.broadcast_to(jnp.arange(skv)[None, :], (x.shape[0], skv))
+        )
+        mask = build_mask(pos1d, kv_pos, None, causal and kv_override is None, window)
+        o = dense_attention(q, k, v, mask)
+    elif window is not None and kv_override is None:
+        o = swa_attention_xla(q, k, v, pos1d, window)
+    else:
+        kv_pos = pos1d if kv_override is None else (
+            jnp.broadcast_to(jnp.arange(skv)[None, :], (x.shape[0], skv))
+        )
+        o = flash_attention_xla(
+            q, k, v, pos1d, kv_pos, causal=causal and kv_override is None,
+            window=window,
+        )
+    return project_out(p, o)
+
+
+def mha_decode(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, 1, D)
+    position: jax.Array,  # (B,) int32 — current absolute position
+    cache_k: jax.Array,  # (B, S_cache, KV, D) (already includes this token)
+    cache_v: jax.Array,
+    kv_positions: jax.Array,  # (B, S_cache) — absolute pos per slot
+    kv_valid: jax.Array,  # (B, S_cache) bool
+    *,
+    causal: bool = True,  # False for cross-attention
+    window: Optional[int] = None,
+    rope_theta: Optional[float] = 10000.0,
+    rope_kind: str = "rope",
+    mrope_position: Optional[jax.Array] = None,  # (3, B, 1)
+    impl: str = "xla",
+) -> jax.Array:
+    """One-token attention against a (possibly ring) KV cache. The caller
+    has already written this token's K/V into the cache (see kvcache.py);
+    q is projected and rotated here."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if rope_kind == "rope" and rope_theta is not None:
+        q = apply_rope(q, position[:, None], rope_theta)
+    elif rope_kind == "mrope":
+        q = apply_mrope(q, mrope_position, rope_theta)
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        o = kernel_ops.decode_attention(
+            q, cache_k, cache_v, position, kv_positions, kv_valid, window=window
+        )
+    else:
+        mask = build_mask(position[:, None], kv_positions, kv_valid, causal, window)
+        o = dense_attention(q, cache_k, cache_v, mask)
+    return project_out(p, o)
+
+
+def project_kv(p: Dict[str, jax.Array], x: jax.Array, positions, rope_theta,
+               rope_kind="rope") -> Tuple[jax.Array, jax.Array]:
+    """K/V for cache insertion (decode) — same rotation as prefill."""
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bv" in p:
+        v = v + p["bv"]
+    if rope_kind == "rope" and rope_theta is not None:
+        k = apply_rope(k, positions, rope_theta)
+    elif rope_kind == "mrope":
+        k = apply_mrope(k, positions, rope_theta)
+    return k, v

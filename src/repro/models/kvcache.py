@@ -1,0 +1,106 @@
+"""Decode-time caches: full KV, sliding-window ring KV, recurrent states.
+
+Cache layout mirrors the transformer's scan structure: for each position
+``j`` in the repeating block pattern there is one stacked entry with a
+leading ``n_super`` axis, plus unstacked entries for tail layers. All
+writes use per-batch positions (continuous batching: every sequence in
+the batch owns its own write cursor).
+
+Cache kinds per block type:
+- attn  : full cache (B, S_max, KV, D) x2 + positions implied by cursor
+- swa   : ring cache (B, window, KV, D) x2 + explicit slot positions
+- rglru : Griffin state {h: (B, d_rnn), conv: (B, 3, d_rnn)}
+- rwkv  : {shift: (B, D), wkv: (B, H, hd, hd), channel: (B, D)}
+- cross : encoder K/V, written once at encode time (whisper)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attn_cache_init(batch: int, max_len: int, n_kv: int, head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+    }
+
+
+def attn_cache_abstract(batch: int, max_len: int, n_kv: int, head_dim: int, dtype):
+    s = jax.ShapeDtypeStruct((batch, max_len, n_kv, head_dim), dtype)
+    return {"k": s, "v": s}
+
+
+def attn_cache_write(
+    cache: Dict, k: jax.Array, v: jax.Array, pos: jax.Array
+) -> Dict:
+    """k, v: (B, 1, KV, D); pos: (B,) absolute positions (cursor)."""
+    b = k.shape[0]
+    idx = jnp.arange(b)
+    return {
+        "k": cache["k"].at[idx, pos].set(k[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[idx, pos].set(v[:, 0].astype(cache["v"].dtype)),
+    }
+
+
+def attn_cache_views(cache: Dict, pos: jax.Array) -> Tuple:
+    """(k, v, kv_positions, kv_valid) for full caches. pos: (B,) cursor =
+    position of the newest token (already written)."""
+    b, s = cache["k"].shape[:2]
+    kv_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    valid = kv_pos <= pos[:, None]
+    return cache["k"], cache["v"], kv_pos, valid
+
+
+def ring_cache_init(batch: int, window: int, n_kv: int, head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+        "pos": jnp.full((batch, window), -1, jnp.int32),
+    }
+
+
+def ring_cache_abstract(batch: int, window: int, n_kv: int, head_dim: int, dtype):
+    return {
+        "k": jax.ShapeDtypeStruct((batch, window, n_kv, head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((batch, window, n_kv, head_dim), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, window), jnp.int32),
+    }
+
+
+def ring_cache_write(cache: Dict, k: jax.Array, v: jax.Array, pos: jax.Array) -> Dict:
+    b, window = cache["pos"].shape
+    slot = pos % window
+    idx = jnp.arange(b)
+    return {
+        "k": cache["k"].at[idx, slot].set(k[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[idx, slot].set(v[:, 0].astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[idx, slot].set(pos),
+    }
+
+
+def ring_cache_views(cache: Dict, pos: jax.Array) -> Tuple:
+    kv_pos = cache["pos"]
+    valid = kv_pos >= 0
+    return cache["k"], cache["v"], kv_pos, valid
+
+
+def ring_cache_fill_from_prefill(
+    cache: Dict, k: jax.Array, v: jax.Array, positions: jax.Array
+) -> Dict:
+    """Bulk-populate a ring from a prefill's last ``window`` tokens.
+    k, v: (B, S, KV, D); positions: (B, S)."""
+    window = cache["pos"].shape[1]
+    s = k.shape[1]
+    take = min(window, s)
+    k_tail, v_tail = k[:, -take:], v[:, -take:]
+    p_tail = positions[:, -take:]
+    slots = p_tail % window  # (B, take)
+    bidx = jnp.arange(k.shape[0])[:, None]
+    return {
+        "k": cache["k"].at[bidx, slots].set(k_tail.astype(cache["k"].dtype)),
+        "v": cache["v"].at[bidx, slots].set(v_tail.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[bidx, slots].set(p_tail),
+    }

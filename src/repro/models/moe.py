@@ -1,0 +1,291 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch.
+
+Routing is top-k softmax (mixtral: k=2 over 8 experts; llama4-maverick:
+k=1 over 128 experts + a shared expert). Dispatch is the TPU-friendly
+sort-based scheme (MaxText-style): tokens are ranked within their expert
+group and dropped beyond capacity, giving static shapes and active-FLOPs
+proportional to tokens*k — NOT the dense all-experts einsum, whose HLO
+FLOPs would be E/k times too large and would poison the roofline numbers.
+
+Expert weights are stacked (E, d, f) and logically sharded on the
+"expert" axis; the (E, C, d) dispatch buffer is annotated so GSPMD
+inserts the token all-to-all of expert parallelism.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Param, apply_mlp, mlp_spec
+from repro.models.sharding_hooks import constrain
+
+
+def moe_spec(
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    activation: str,
+    shared_expert: bool,
+) -> Dict:
+    spec = {
+        "router": Param((d_model, n_experts), ("embed", "expert"), scale=0.02),
+        "gate": Param((n_experts, d_model, d_ff), ("expert", "embed", "mlp")),
+        "up": Param((n_experts, d_model, d_ff), ("expert", "embed", "mlp")),
+        "down": Param((n_experts, d_ff, d_model), ("expert", "mlp", "embed")),
+    }
+    if shared_expert:
+        spec["shared"] = mlp_spec(d_model, d_ff, activation)
+    return spec
+
+
+def apply_moe(
+    p: Dict,
+    x: jax.Array,  # (B, S, D)
+    *,
+    top_k: int,
+    activation: str,
+    capacity_factor: float = 1.25,
+    min_capacity: int = 4,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss). aux_loss is the standard load-balancing
+    loss (mean over experts of fraction_tokens * fraction_probs * E).
+
+    When a mesh is installed (sharding_hooks.set_moe_mesh) and the batch
+    divides the data axes, dispatch runs in the shard_map local path —
+    GSPMD cannot shard data-dependent sort/scatter and falls back to
+    replication-by-all-reduce, which measured 18.7 TB/device of
+    all-reduce on llama4 prefill (EXPERIMENTS.md §Perf iteration 3)."""
+    from repro.models.sharding_hooks import moe_mesh
+
+    mesh = moe_mesh()
+    if mesh is not None:
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        n_shards = 1
+        for a in data_axes:
+            n_shards *= mesh.shape[a]
+        if data_axes and x.shape[0] % n_shards == 0 and x.shape[0] >= n_shards:
+            return _apply_moe_local(
+                p, x, mesh, data_axes,
+                top_k=top_k, activation=activation,
+                capacity_factor=capacity_factor, min_capacity=min_capacity,
+            )
+    return _apply_moe_global(
+        p, x, top_k=top_k, activation=activation,
+        capacity_factor=capacity_factor, min_capacity=min_capacity,
+    )
+
+
+def _apply_moe_local(
+    p: Dict,
+    x: jax.Array,
+    mesh,
+    data_axes,
+    *,
+    top_k: int,
+    activation: str,
+    capacity_factor: float,
+    min_capacity: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """shard_map over the data axes (model axis stays automatic):
+    - token routing/sort/scatter: LOCAL per data shard (no collectives);
+    - FSDP'd weight dims: explicit all_gather over the data axes (the
+      gather GSPMD would otherwise insert implicitly, with reduce-scatter
+      as its transpose in the backward pass);
+    - expert (or in-expert TP) sharding over 'model': automatic GSPMD,
+      including the single per-layer output all-reduce."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    def param_manual_spec(leaf, axes):
+        full = shd.spec_for_shape(leaf.shape, axes, mesh, shd.PARAM_RULES)
+        manual = []
+        for entry in full:
+            if entry is None:
+                manual.append(None)
+            elif isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a in data_axes)
+                manual.append(kept if kept else None)
+            else:
+                manual.append(entry if entry in data_axes else None)
+        return P(*manual)
+
+    axes_map = {
+        "router": ("embed", "expert"),
+        "gate": ("expert", "embed", "mlp"),
+        "up": ("expert", "embed", "mlp"),
+        "down": ("expert", "mlp", "embed"),
+    }
+    shared_axes = {
+        "gate": ("embed", "mlp"), "up": ("embed", "mlp"),
+        "down": ("mlp", "embed"),
+        "up_bias": ("mlp",), "down_bias": ("embed",),
+    }
+
+    in_specs_p = {}
+    for name in axes_map:
+        in_specs_p[name] = param_manual_spec(p[name], axes_map[name])
+    if "shared" in p:
+        in_specs_p["shared"] = {
+            k: param_manual_spec(p["shared"][k], shared_axes[k])
+            for k in p["shared"]
+        }
+    x_spec = P(data_axes if len(data_axes) > 1 else data_axes[0], None, None)
+
+    def gather_full(w, spec):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for a in names:
+                w = _jax.lax.all_gather(w, a, axis=dim, tiled=True)
+        return w
+
+    def body(x_loc, p_loc):
+        full = {
+            name: gather_full(p_loc[name], in_specs_p[name])
+            for name in axes_map
+        }
+        if "shared" in p_loc:
+            full["shared"] = {
+                k: gather_full(p_loc["shared"][k], in_specs_p["shared"][k])
+                for k in p_loc["shared"]
+            }
+        out, aux = _apply_moe_global(
+            full, x_loc, top_k=top_k, activation=activation,
+            capacity_factor=capacity_factor, min_capacity=min_capacity,
+            # No logical-axis hints inside the partial-auto manual region:
+            # with_sharding_constraint on auto axes inside shard_map grad
+            # triggers an XLA partitioner check failure (jax 0.8 / XLA).
+            use_constraints=False,
+        )
+        # aux is a per-shard mean; average across data shards.
+        for a in data_axes:
+            aux = _jax.lax.pmean(aux, a)
+        return out, aux
+
+    p_in = {k: p[k] for k in axes_map}
+    if "shared" in p:
+        p_in["shared"] = p["shared"]
+    specs_in = {k: in_specs_p[k] for k in axes_map}
+    if "shared" in p:
+        specs_in["shared"] = in_specs_p["shared"]
+    return _jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(x_spec, specs_in),
+        out_specs=(x_spec, P()),
+        axis_names=frozenset(data_axes),
+        check_vma=False,
+    )(x, p_in)
+
+
+def _apply_moe_global(
+    p: Dict,
+    x: jax.Array,  # (B, S, D)
+    *,
+    top_k: int,
+    activation: str,
+    capacity_factor: float = 1.25,
+    min_capacity: int = 4,
+    use_constraints: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    router_logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (T, E)
+    top_w, top_e = jax.lax.top_k(probs, top_k)  # (T, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch/Mixtral convention).
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = e * jnp.sum(me * ce)
+
+    capacity = max(
+        min_capacity, int(math.ceil(t * top_k / e * capacity_factor))
+    )
+
+    # ---- sort-based dispatch ------------------------------------------
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_w = top_w.reshape(-1).astype(x.dtype)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    sorted_w = flat_w[order]
+    # Rank within expert group: arange minus the group's start offset.
+    counts = jnp.bincount(sorted_e, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * top_k) - starts[sorted_e]
+    keep = rank < capacity
+    slot = jnp.where(keep, sorted_e * capacity + rank, e * capacity)  # drop slot
+
+    dispatched = jnp.zeros((e * capacity + 1, d), x.dtype)
+    dispatched = dispatched.at[slot].set(xf[sorted_tok])
+    xe = dispatched[:-1].reshape(e, capacity, d)
+    if use_constraints:
+        xe = constrain(xe, ("expert", None, "embed"))
+
+    # ---- expert FFN (stacked einsum) -----------------------------------
+    if activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if activation == "swiglu" else (
+            lambda z: jax.nn.gelu(z, approximate=True)
+        )
+        h = act(jnp.einsum("ecd,edf->ecf", xe, p["gate"])) * jnp.einsum(
+            "ecd,edf->ecf", xe, p["up"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["up"]), approximate=True)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["down"])
+    if use_constraints:
+        ye = constrain(ye, ("expert", None, "embed"))
+
+    # ---- combine ---------------------------------------------------------
+    yflat = ye.reshape(e * capacity, d)
+    contrib = jnp.where(keep[:, None], yflat[jnp.minimum(slot, e * capacity - 1)], 0.0)
+    out = jnp.zeros((t, d), x.dtype)
+    out = out.at[sorted_tok].add(contrib * sorted_w[:, None])
+
+    if "shared" in p:
+        out = out + apply_mlp(xf, p["shared"], activation)
+    return out.reshape(b, s, d), aux
+
+
+def apply_moe_dense_reference(
+    p: Dict, x: jax.Array, *, top_k: int, activation: str
+) -> jax.Array:
+    """Oracle: every token through every expert, weighted by the top-k
+    router weights (no capacity drops). Used only in tests."""
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    xf = x.reshape(-1, d)
+    probs = jax.nn.softmax(xf.astype(jnp.float32) @ p["router"].astype(jnp.float32), -1)
+    top_w, top_e = jax.lax.top_k(probs, top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    weights = jnp.zeros((xf.shape[0], e), jnp.float32).at[
+        jnp.arange(xf.shape[0])[:, None], top_e
+    ].set(top_w)
+    if activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if activation == "swiglu" else (
+            lambda z: jax.nn.gelu(z, approximate=True)
+        )
+        h = act(jnp.einsum("td,edf->tef", xf, p["gate"])) * jnp.einsum(
+            "td,edf->tef", xf, p["up"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("td,edf->tef", xf, p["up"]), approximate=True)
+    ye = jnp.einsum("tef,efd->ted", h, p["down"])
+    out = jnp.einsum("ted,te->td", ye.astype(jnp.float32), weights).astype(x.dtype)
+    if "shared" in p:
+        out = out + apply_mlp(xf, p["shared"], activation)
+    return out.reshape(b, s, d)

@@ -1,0 +1,370 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma/Griffin) and RWKV-6.
+
+Both are linear recurrences with data-dependent, element-wise decay —
+the attention-free long-context citizens of the architecture pool. The
+prefill paths here are the pure-JAX references; the Pallas kernels
+(repro.kernels.rglru / repro.kernels.wkv6) implement the same recurrences
+with chunked VMEM tiling and are validated against these.
+
+RG-LRU (arXiv:2402.19427 §2.4):
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)  (data-dependent decay, c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Prefill uses jax.lax.associative_scan (the recurrence is affine in h, so
+the (a, b) pairs compose associatively) — O(log S) depth on TPU.
+The enclosing Griffin recurrent block: dual linear branches, a width-4
+causal depthwise conv on the recurrent branch, GeLU gating on the other.
+
+RWKV-6 "Finch" (arXiv:2404.05892): token-shift with data-dependent
+interpolation (LoRA adapters), per-head matrix-valued state
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w0 + lora_w(x~_t))). Prefill is a lax.scan over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Param
+
+RGLRU_C = 8.0
+CONV_WIDTH = 4
+
+
+# ===========================================================================
+# RG-LRU / Griffin recurrent block
+# ===========================================================================
+
+
+def rglru_spec(d_rnn: int) -> Dict[str, Param]:
+    return {
+        "w_a": Param((d_rnn, d_rnn), ("mlp", "mlp2")),
+        "b_a": Param((d_rnn,), ("mlp",), init="zeros"),
+        "w_x": Param((d_rnn, d_rnn), ("mlp", "mlp2")),
+        "b_x": Param((d_rnn,), ("mlp",), init="zeros"),
+        # Lambda parameterized so softplus(Lambda) spans useful decays.
+        "lam": Param((d_rnn,), ("mlp",), init="ones"),
+    }
+
+
+def rglru_gates(p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(decay a_t, input contribution b_t) for x: (..., S, D)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via log-space: 1 - exp(2 log_a)
+    gate = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = gate * (i * xf)
+    return a, b
+
+
+def rglru_prefill(
+    p: Dict, x: jax.Array, h0: Optional[jax.Array] = None,
+    use_associative_scan: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (outputs (B, S, D), final state (B, D))."""
+    a, b = rglru_gates(p, x)
+    if h0 is not None:
+        # Fold the carried state into the first step: h_1 = a_1 h0 + b_1.
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    if use_associative_scan:
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = hh
+    else:
+        def step(carry, ab):
+            at, bt = ab
+            h = at * carry + bt
+            return h, h
+
+        _, h = jax.lax.scan(
+            step,
+            jnp.zeros(x.shape[:1] + x.shape[2:], jnp.float32),
+            (a.transpose(1, 0, 2), b.transpose(1, 0, 2)),
+        )
+        h = h.transpose(1, 0, 2)
+    return h.astype(x.dtype), h[:, -1].astype(jnp.float32)
+
+
+def rglru_step(
+    p: Dict, x: jax.Array, h: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Decode: x (B, D), h (B, D) -> (out (B, D), h')."""
+    a, b = rglru_gates(p, x[:, None, :])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x.dtype), h_new
+
+
+def conv1d_spec(d: int) -> Dict[str, Param]:
+    return {
+        "w": Param((CONV_WIDTH, d), (None, "mlp")),
+        "b": Param((d,), ("mlp",), init="zeros"),
+    }
+
+
+def causal_conv1d(p: Dict, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width 4. x: (B, S, D)."""
+    pad = jnp.pad(x, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1]] * p["w"][i] for i in range(CONV_WIDTH)
+    )
+    return out + p["b"]
+
+
+def causal_conv1d_step(
+    p: Dict, x: jax.Array, conv_state: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Decode: x (B, D), conv_state (B, W-1, D) = previous inputs."""
+    window = jnp.concatenate([conv_state, x[:, None, :]], axis=1)  # (B, W, D)
+    out = jnp.einsum("bwd,wd->bd", window, p["w"]) + p["b"]
+    return out, window[:, 1:]
+
+
+def griffin_block_spec(d_model: int, d_rnn: int) -> Dict:
+    return {
+        "in_x": Param((d_model, d_rnn), ("embed", "mlp")),
+        "in_gate": Param((d_model, d_rnn), ("embed", "mlp")),
+        "conv": conv1d_spec(d_rnn),
+        "rglru": rglru_spec(d_rnn),
+        "out": Param((d_rnn, d_model), ("mlp", "embed")),
+    }
+
+
+def griffin_block(
+    p: Dict, x: jax.Array, state: Optional[Dict] = None, impl: str = "xla"
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Griffin recurrent block, full-sequence form. x: (B, S, D).
+    Returns (y, new_state) — state carries (h, conv window) for decode."""
+    branch = x @ p["in_x"]
+    gate = jax.nn.gelu(x @ p["in_gate"], approximate=True)
+    h0 = None if state is None else state["h"]
+    if state is None:
+        conv_out = causal_conv1d(p["conv"], branch)
+        hist = jnp.pad(branch, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    else:
+        # Sequence continuation with conv history (chunked prefill/decode);
+        # compute directly on the window including history (causal_conv1d
+        # would re-pad with zeros and lose the carried inputs):
+        hist = jnp.concatenate([state["conv"].astype(branch.dtype), branch], axis=1)
+        conv_out = sum(
+            hist[:, i : i + branch.shape[1]] * p["conv"]["w"][i]
+            for i in range(CONV_WIDTH)
+        ) + p["conv"]["b"]
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        a, bb = rglru_gates(p["rglru"], conv_out)
+        if h0 is not None:
+            bb = bb.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+        rec, h_last = kernel_ops.rglru_scan(a, bb)
+        rec = rec.astype(x.dtype)
+    else:
+        rec, h_last = rglru_prefill(p["rglru"], conv_out, h0)
+    y = (rec * gate) @ p["out"]
+    new_state = {
+        "h": h_last,
+        # The TRUE last W-1 raw inputs, including carried history when the
+        # new chunk is shorter than the conv window (decode: S=1).
+        # f32 for cache dtype stability across steps.
+        "conv": hist[:, -(CONV_WIDTH - 1):].astype(jnp.float32),
+    }
+    return y, new_state
+
+
+def griffin_block_step(
+    p: Dict, x: jax.Array, state: Dict
+) -> Tuple[jax.Array, Dict]:
+    """Decode step. x: (B, D)."""
+    branch = x @ p["in_x"]
+    gate = jax.nn.gelu(x @ p["in_gate"], approximate=True)
+    conv_out, conv_state = causal_conv1d_step(p["conv"], branch, state["conv"])
+    rec, h = rglru_step(p["rglru"], conv_out, state["h"])
+    y = (rec * gate) @ p["out"]
+    return y, {"h": h, "conv": conv_state}
+
+
+def griffin_init_state(batch: int, d_rnn: int) -> Dict:
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, d_rnn), jnp.float32),
+    }
+
+
+# ===========================================================================
+# RWKV-6 (Finch)
+# ===========================================================================
+
+LORA_RANK = 32
+
+
+def _lora(d_in: int, d_out: int) -> Dict[str, Param]:
+    return {
+        "a": Param((d_in, LORA_RANK), ("embed", None), scale=0.02),
+        "b": Param((LORA_RANK, d_out), (None, "embed"), scale=0.02),
+    }
+
+
+def _apply_lora(p: Dict, x: jax.Array) -> jax.Array:
+    return jnp.tanh(x @ p["a"]) @ p["b"]
+
+
+def rwkv6_timemix_spec(d_model: int, n_heads: int) -> Dict:
+    head_dim = d_model // n_heads
+    return {
+        "mu": Param((5, d_model), (None, "embed"), scale=0.02),  # r,k,v,g,w
+        "mu_x": Param((d_model,), ("embed",), scale=0.02),
+        "lora_rkvgw": _lora(d_model, 5 * d_model),
+        "w_r": Param((d_model, d_model), ("embed", "heads_flat")),
+        "w_k": Param((d_model, d_model), ("embed", "heads_flat")),
+        "w_v": Param((d_model, d_model), ("embed", "heads_flat")),
+        "w_g": Param((d_model, d_model), ("embed", "heads_flat")),
+        "w_o": Param((d_model, d_model), ("heads_flat", "embed")),
+        "decay_base": Param((d_model,), ("embed",), init="zeros"),
+        "lora_w": _lora(d_model, d_model),
+        "bonus_u": Param((n_heads, head_dim), ("heads", "head_dim"), scale=0.02),
+        "ln_scale": Param((d_model,), ("embed",), init="ones"),
+        "ln_bias": Param((d_model,), ("embed",), init="zeros"),
+    }
+
+
+def _rwkv6_inputs(p: Dict, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent token-shift interpolation (Finch ddlerp) and
+    per-channel decay. x, x_prev: (B, S, D)."""
+    d = x.shape[-1]
+    delta = x_prev - x
+    x_base = x + delta * p["mu_x"]
+    mods = _apply_lora(p["lora_rkvgw"], x_base).reshape(
+        x.shape[:-1] + (5, d)
+    )  # (B, S, 5, D)
+    mix = p["mu"][None, None] + mods  # (B, S, 5, D)
+    xr, xk, xv, xg, xw = [
+        x + delta * mix[..., i, :] for i in range(5)
+    ]
+    r = xr @ p["w_r"]
+    k = xk @ p["w_k"]
+    v = xv @ p["w_v"]
+    g = jax.nn.silu(xg @ p["w_g"])
+    log_neg_w = p["decay_base"] + _apply_lora(p["lora_w"], xw)
+    w = jnp.exp(-jnp.exp(log_neg_w.astype(jnp.float32)))  # (B, S, D) in (0,1)
+    return r, k, v, g, w
+
+
+def rwkv6_wkv_scan(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (B, S, H, V)
+    w: jax.Array,  # (B, S, H, K) decay in (0,1)
+    u: jax.Array,  # (H, K) bonus
+    state: Optional[jax.Array] = None,  # (B, H, K, V)
+) -> Tuple[jax.Array, jax.Array]:
+    """The WKV-6 recurrence (pure scan reference). Returns (out, state')."""
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S_new = wt[..., :, None] * S + kv
+        return S_new, out
+
+    xs = (
+        r.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        w.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    state, outs = jax.lax.scan(step, state, xs)
+    return outs.transpose(1, 0, 2, 3), state  # (B, S, H, V), (B,H,K,V)
+
+
+def rwkv6_timemix(
+    p: Dict,
+    x: jax.Array,  # (B, S, D)
+    n_heads: int,
+    state: Optional[Dict] = None,
+    impl: str = "xla",
+) -> Tuple[jax.Array, Dict]:
+    b, s, d = x.shape
+    hd = d // n_heads
+    if state is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        wkv_state = None
+    else:
+        x_prev = jnp.concatenate(
+            [state["shift"][:, None, :].astype(x.dtype), x[:, :-1]], axis=1
+        )
+        wkv_state = state["wkv"]
+    r, k, v, g, w = _rwkv6_inputs(p, x, x_prev)
+    rh = r.reshape(b, s, n_heads, hd)
+    kh = k.reshape(b, s, n_heads, hd)
+    vh = v.reshape(b, s, n_heads, hd)
+    wh = w.reshape(b, s, n_heads, hd)
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        out, wkv_new = kernel_ops.wkv6(rh, kh, vh, wh, p["bonus_u"], wkv_state)
+    else:
+        out, wkv_new = rwkv6_wkv_scan(rh, kh, vh, wh, p["bonus_u"], wkv_state)
+    out = out.reshape(b, s, d)
+    # Per-head group norm, then gate and output projection.
+    oh = out.reshape(b, s, n_heads, hd)
+    mu = jnp.mean(oh, -1, keepdims=True)
+    var = jnp.var(oh, -1, keepdims=True)
+    oh = (oh - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = oh.reshape(b, s, d) * p["ln_scale"] + p["ln_bias"]
+    y = (out.astype(x.dtype) * g) @ p["w_o"]
+    # States are kept f32 across steps (cache dtype stability).
+    return y, {"shift": x[:, -1].astype(jnp.float32), "wkv": wkv_new}
+
+
+def rwkv6_channelmix_spec(d_model: int, d_ff: int) -> Dict:
+    return {
+        "mu_k": Param((d_model,), ("embed",), scale=0.02),
+        "mu_r": Param((d_model,), ("embed",), scale=0.02),
+        "w_k": Param((d_model, d_ff), ("embed", "mlp")),
+        "w_v": Param((d_ff, d_model), ("mlp", "embed")),
+        "w_r": Param((d_model, d_model), ("embed", "embed2")),
+    }
+
+
+def rwkv6_channelmix(
+    p: Dict, x: jax.Array, state: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """state: (B, D) last token (None = zero-shift prefill)."""
+    if state is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = jnp.concatenate(
+            [state[:, None, :].astype(x.dtype), x[:, :-1]], axis=1
+        )
+    delta = x_prev - x
+    xk = x + delta * p["mu_k"]
+    xr = x + delta * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"])
+    return out, x[:, -1].astype(jnp.float32)
+
+
+def rwkv6_init_state(batch: int, d_model: int, n_heads: int) -> Dict:
+    hd = d_model // n_heads
+    return {
+        "time": {
+            "shift": jnp.zeros((batch, d_model), jnp.float32),
+            "wkv": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        },
+        "channel": jnp.zeros((batch, d_model), jnp.float32),
+    }

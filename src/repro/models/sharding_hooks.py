@@ -1,0 +1,52 @@
+"""Pluggable activation-sharding hook.
+
+Model code annotates activations with *logical* axis names via
+``constrain(x, ("batch", "seq", "embed"))``. Outside any mesh this is the
+identity; the distributed layer (repro.distributed.sharding) installs a
+resolver that maps logical axes to mesh axes and applies
+``jax.lax.with_sharding_constraint``. Keeping the hook here avoids a
+models -> distributed import cycle and keeps the model zoo runnable on a
+single device with zero distribution machinery.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+
+_RESOLVER: Optional[Callable[[jax.Array, Tuple[Optional[str], ...]], jax.Array]] = None
+
+
+def set_resolver(fn) -> None:
+    global _RESOLVER
+    _RESOLVER = fn
+
+
+def clear_resolver() -> None:
+    set_resolver(None)
+
+
+def constrain(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    if _RESOLVER is None:
+        return x
+    return _RESOLVER(x, axes)
+
+
+# --- MoE shard_map context ---------------------------------------------------
+# When a mesh is installed, moe.apply_moe switches to the local-dispatch
+# shard_map path: token routing (sort/scatter) runs per data shard with
+# ZERO collectives, expert/TP sharding stays automatic on the model axis.
+_MOE_MESH = None
+
+
+def set_moe_mesh(mesh) -> None:
+    global _MOE_MESH
+    _MOE_MESH = mesh
+
+
+def clear_moe_mesh() -> None:
+    set_moe_mesh(None)
+
+
+def moe_mesh():
+    return _MOE_MESH

@@ -1,0 +1,159 @@
+"""Exact FLOP counting by walking the jaxpr (backend-independent).
+
+Scan bodies multiply by their trip count; pjit / remat / custom-vjp
+regions recurse. Matmul FLOPs use the 2*B*M*N*K convention from
+dot_general dimension numbers; elementwise/reduce FLOPs are ignored
+(sub-1% at LM shapes — documented in EXPERIMENTS.md §Roofline
+methodology). Counts are GLOBAL (logical program); divide by mesh size
+for per-device (assumes FLOPs shard evenly — true for every sharding the
+rules engine emits).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    k = math.prod(lhs.shape[i] for i in lc)
+    b = math.prod(lhs.shape[i] for i in lb)
+    m = math.prod(
+        lhs.shape[i]
+        for i in range(len(lhs.shape))
+        if i not in set(lc) | set(lb)
+    )
+    n = math.prod(
+        rhs.shape[i]
+        for i in range(len(rhs.shape))
+        if i not in set(rc) | set(rb)
+    )
+    return 2.0 * b * m * n * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval  # kernel
+    # flops = 2 * out_elems * (kernel spatial+input-feature size)
+    dn = eqn.params["dimension_numbers"]
+    kshape = rhs.shape
+    out_elems = math.prod(out.shape)
+    kernel_fanin = math.prod(kshape) / kshape[dn.rhs_spec[0]]
+    return 2.0 * out_elems * kernel_fanin
+
+
+def jaxpr_flops(jaxpr) -> float:
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total += _dot_flops(eqn)
+        elif name == "conv_general_dilated":
+            total += _conv_flops(eqn)
+        elif name == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            total += eqn.params["length"] * jaxpr_flops(body)
+        elif name == "while":
+            body = eqn.params["body_jaxpr"].jaxpr
+            # Unknown trip count: count once (we never emit raw whiles).
+            total += jaxpr_flops(body)
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            total += max(jaxpr_flops(b.jaxpr) for b in branches)
+        elif "jaxpr" in eqn.params:
+            sub = eqn.params["jaxpr"]
+            total += jaxpr_flops(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+        elif "call_jaxpr" in eqn.params:
+            sub = eqn.params["call_jaxpr"]
+            total += jaxpr_flops(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+    return total
+
+
+_DTYPE_BYTES = {
+    "bool": 1, "int8": 1, "uint8": 1, "int16": 2, "uint16": 2,
+    "int32": 4, "uint32": 4, "int64": 8, "uint64": 8,
+    "bfloat16": 2, "float16": 2, "float32": 4, "float64": 8,
+}
+
+
+def _aval_bytes(aval) -> float:
+    return math.prod(aval.shape) * _DTYPE_BYTES.get(str(aval.dtype), 4)
+
+
+_TRAFFIC_PRIMS = {
+    "dot_general",
+    "conv_general_dilated",
+    "gather",
+    "scatter",
+    "scatter-add",
+    "scatter_add",
+    "dynamic_slice",
+    "dynamic_update_slice",
+    "sort",
+    "cumsum",
+}
+
+
+def _is_attention_internal(aval) -> bool:
+    """Attention-block tensors (logits/probs/acc in the chunked schedule)
+    are rank-5 (b, kv, g, q_chunk, kv_chunk|d) float32 by construction in
+    repro.models.attention. On the TPU target these live in VMEM inside
+    the flash/decode Pallas kernels and never touch HBM, so the ideal
+    traffic count excludes them. Model weights/activations are rank<=4
+    and unaffected; the convention is documented in EXPERIMENTS.md."""
+    return len(aval.shape) >= 5 and str(aval.dtype) == "float32"
+
+
+def jaxpr_bytes(jaxpr) -> float:
+    """Ideal-fusion HBM traffic: operand+result bytes of matmuls and
+    data-movement ops only (gather/scatter/slice/sort), everything
+    elementwise assumed fused into its producers/consumers; attention-
+    internal block tensors excluded (VMEM-resident in the Pallas
+    kernels — see _is_attention_internal). Scan bodies multiply by trip
+    count. This is a LOWER bound on real traffic and the roofline-
+    appropriate idealization; repro.roofline.hlo_cost gives the
+    (CPU-fusion) upper bound."""
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in _TRAFFIC_PRIMS:
+            total += sum(
+                _aval_bytes(v.aval)
+                for v in eqn.invars
+                if hasattr(v, "aval") and not _is_attention_internal(v.aval)
+            )
+            total += sum(
+                _aval_bytes(v.aval)
+                for v in eqn.outvars
+                if not _is_attention_internal(v.aval)
+            )
+        elif name == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            total += eqn.params["length"] * jaxpr_bytes(body)
+        elif name == "while":
+            total += jaxpr_bytes(eqn.params["body_jaxpr"].jaxpr)
+        elif name == "cond":
+            total += max(jaxpr_bytes(b.jaxpr) for b in eqn.params["branches"])
+        elif "jaxpr" in eqn.params:
+            sub = eqn.params["jaxpr"]
+            total += jaxpr_bytes(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+        elif "call_jaxpr" in eqn.params:
+            sub = eqn.params["call_jaxpr"]
+            total += jaxpr_bytes(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+    return total
+
+
+def flops_of(fn, *abstract_args) -> float:
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    return jaxpr_flops(closed.jaxpr)
+
+
+def costs_of(fn, *abstract_args):
+    """(flops, ideal_bytes) — one trace, both counts."""
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    return jaxpr_flops(closed.jaxpr), jaxpr_bytes(closed.jaxpr)

@@ -1,0 +1,75 @@
+"""Bridge: DeepRT scheduler <-> the compiled inference engine.
+
+Live serving uses the identical scheduler objects as simulation, with
+two swaps:
+- the event loop is a WallClock;
+- the EDF worker's ``exec_time_fn`` EXECUTES the job synchronously on
+  the engine and returns the measured wall time (the device is
+  sequential, so blocking the loop for the duration of one job is
+  precisely DeepRT's non-preemptive execution model — paper §4.3).
+
+``build_live_scheduler`` also runs the offline Performance Profiler
+(paper §4.1) over the engine to produce the WCET table the Admission
+Control Module consumes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    DeepRT,
+    ExecutionModel,
+    MeasuredProfiler,
+    ProfileTable,
+    WallClock,
+)
+from repro.serving.engine import InferenceEngine
+
+
+def profile_engine(
+    engine: InferenceEngine,
+    categories: Iterable[Tuple[str, Tuple[int, ...], str]],
+    batch_sizes=(1, 2, 4, 8),
+    runs: int = 5,
+    quantile: float = 0.99,
+) -> ProfileTable:
+    """Offline profiler pass (paper §4.1): p99 over repeated runs per
+    (model, shape, batch)."""
+    table = ProfileTable()
+    profiler = MeasuredProfiler(warmup=2, runs=runs, quantile=quantile)
+    for mid, shape_key, kind in categories:
+        profiler.profile(
+            table,
+            mid,
+            shape_key,
+            list(batch_sizes),
+            lambda b, _m=mid, _s=shape_key, _k=kind: engine.execute(_m, _s, b, _k),
+        )
+    return table
+
+
+def build_live_scheduler(
+    configs: Dict[str, ModelConfig],
+    categories: Iterable[Tuple[str, Tuple[int, ...], str]],
+    batch_sizes=(1, 2, 4, 8),
+    utilization_bound: float = 1.0,
+) -> Tuple[DeepRT, InferenceEngine, ProfileTable]:
+    engine = InferenceEngine(configs)
+    cats = list(categories)
+    kinds = {(mid, shape): kind for mid, shape, kind in cats}
+    table = profile_engine(engine, cats, batch_sizes)
+
+    def run_job(job, wcet):
+        kind = kinds.get((job.category.model_id, job.shape_key), "prefill")
+        return engine.execute(
+            job.category.model_id, job.shape_key, job.batch_size, kind
+        )
+
+    sched = DeepRT(
+        table,
+        loop=WallClock(),
+        execution=ExecutionModel(actual_fn=run_job),
+        utilization_bound=utilization_bound,
+    )
+    return sched, engine, table

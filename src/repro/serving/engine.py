@@ -1,0 +1,106 @@
+"""Inference engine: compiled batched steps for DeepRT categories.
+
+A DeepRT *category* is (model_id, shape bucket). The engine pre-compiles
+one XLA program per (model, kind, seq bucket, batch bucket) — batch
+sizes are padded up to the next power of two so the compile count stays
+logarithmic while the profiler table (which is keyed on true batch size,
+rounded up identically) stays consistent with what actually runs.
+
+Two step kinds per the shape pool:
+- ``prefill``: full forward over (b, seq) tokens -> last-token logits
+- ``decode`` : one token against a seq-length KV cache
+
+``execute`` runs a job instance synchronously (the device is sequential —
+exactly DeepRT's execution model) and returns measured wall seconds, so
+the EDF worker's exec_time_fn plugs straight in (batcher_bridge.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model_for
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class InferenceEngine:
+    def __init__(self, configs: Dict[str, ModelConfig], seed: int = 0):
+        self.configs = dict(configs)
+        self.models = {mid: model_for(cfg) for mid, cfg in configs.items()}
+        key = jax.random.PRNGKey(seed)
+        self.params = {}
+        for i, (mid, model) in enumerate(self.models.items()):
+            self.params[mid] = model.init(jax.random.fold_in(key, i))
+        self._compiled: Dict[Tuple, Any] = {}
+        self._caches: Dict[Tuple, Any] = {}
+
+    # ----- compiled step factories ----------------------------------------
+    def _prefill_fn(self, mid: str, seq: int, batch: int):
+        key = ("prefill", mid, seq, batch)
+        if key not in self._compiled:
+            model = self.models[mid]
+
+            def run(params, tokens):
+                logits, _ = model.forward(params, tokens)
+                return logits[:, -1].argmax(-1)
+
+            self._compiled[key] = jax.jit(run)
+        return self._compiled[key]
+
+    def _decode_fn(self, mid: str, seq: int, batch: int):
+        key = ("decode", mid, seq, batch)
+        if key not in self._compiled:
+            model = self.models[mid]
+            self._compiled[key] = jax.jit(
+                lambda params, cache, tok, cur: model.decode_step(
+                    params, cache, tok, cur
+                )
+            )
+        return self._compiled[key]
+
+    def _cache_for(self, mid: str, seq: int, batch: int):
+        key = (mid, seq, batch)
+        if key not in self._caches:
+            self._caches[key] = self.models[mid].init_cache(batch, seq)
+        return self._caches[key]
+
+    # ----- execution ---------------------------------------------------------
+    def warmup(self, mid: str, shape_key: Tuple[int, ...], batch_sizes,
+               kind: str = "prefill") -> None:
+        for b in batch_sizes:
+            self.execute(mid, shape_key, b, kind)
+
+    def execute(
+        self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
+        kind: str = "prefill",
+    ) -> float:
+        """Run one batched job synchronously; returns wall seconds.
+        shape_key = (seq_len,) for LM categories."""
+        seq = shape_key[0]
+        b = _bucket(batch_size)
+        cfg = self.configs[mid]
+        tokens = jnp.zeros((b, seq), jnp.int32)
+        if kind == "prefill":
+            fn = self._prefill_fn(mid, seq, b)
+            t0 = time.perf_counter()
+            fn(self.params[mid], tokens).block_until_ready()
+            return time.perf_counter() - t0
+        fn = self._decode_fn(mid, seq, b)
+        cache = self._cache_for(mid, seq, b)
+        tok = jnp.zeros((b,), jnp.int32)
+        cur = jnp.full((b,), seq - 1, jnp.int32)
+        t0 = time.perf_counter()
+        logits, new_cache = fn(self.params[mid], cache, tok, cur)
+        logits.block_until_ready()
+        self._caches[(mid, seq, b)] = new_cache
+        return time.perf_counter() - t0

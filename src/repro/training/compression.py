@@ -1,0 +1,87 @@
+"""Int8 error-feedback gradient compression for the cross-pod link.
+
+In-pod ICI is fast (~50 GB/s/link); the cross-pod DCI link is the slow
+edge of the multi-pod mesh, so only the POD-axis reduction is
+compressed. Scheme per leaf:
+
+  1. add the carried error-feedback residual to the local gradient;
+  2. per-block (last-dim) max-abs scales -> symmetric int8 quantization;
+  3. all_gather(int8 blocks + f32 scales) over the pod axis
+     (for pod counts of 2-4, gather+local-sum moves ~the same bytes as a
+     ring all-reduce but admits int8 payloads, which jax.lax.psum would
+     overflow);
+  4. dequantize-and-mean locally; residual = local_grad - own quantized
+     contribution (error feedback keeps the compression unbiased over
+     time — SGD-EF convergence argument).
+
+Bytes on the wire: 1/4 of bf16, 1/8 of f32 gradients (+ scales epsilon).
+
+Used inside shard_map over the pod axis by train_loop when
+``cross_pod_compression=True``; in-pod reductions stay full precision.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., N) -> int8 codes (..., N) + scales (..., N/BLOCK)."""
+    shape = x.shape
+    n = shape[-1]
+    pad = (-n) % BLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(shape[:-1] + (-1, BLOCK))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _dequantize(codes: jax.Array, scale: jax.Array, n: int) -> jax.Array:
+    xb = codes.astype(jnp.float32) * scale
+    return xb.reshape(xb.shape[:-2] + (-1,))[..., :n]
+
+
+def compressed_pod_mean(
+    grad: jax.Array, residual: jax.Array, axis_name: str
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean-reduce ``grad`` over ``axis_name`` with int8 EF compression.
+    Returns (reduced grad f32, new residual). Call under shard_map with
+    the pod axis in scope."""
+    g = grad.astype(jnp.float32) + residual
+    flat = g.reshape(-1)
+    codes, scale = _quantize(flat)
+    own = _dequantize(codes, scale, flat.shape[0])
+    new_residual = (flat - own).reshape(grad.shape)
+    all_codes = jax.lax.all_gather(codes, axis_name)  # (P, nb, BLOCK) int8
+    all_scales = jax.lax.all_gather(scale, axis_name)
+    n_pods = all_codes.shape[0]
+    total = jnp.sum(
+        all_codes.astype(jnp.float32) * all_scales, axis=0
+    )
+    mean = (
+        total.reshape(-1)[: flat.shape[0]] / n_pods
+    ).reshape(grad.shape)
+    return mean, new_residual
+
+
+def compress_tree_pod_mean(
+    grads: Any, residuals: Any, axis_name: str
+) -> Tuple[Any, Any]:
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [compressed_pod_mean(g, r, axis_name) for g, r in zip(flat_g, flat_r)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )
+
+
+def init_residuals(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

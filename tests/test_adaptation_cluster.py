@@ -1,0 +1,250 @@
+"""Tests for the Adaptation Module (paper §4.4) and the cluster layer."""
+import pytest
+
+from repro.core import (
+    AIMD,
+    BATCH,
+    BATCHDelay,
+    Category,
+    ClusterScheduler,
+    DeepRT,
+    EventLoop,
+    ExecutionModel,
+    ProfileTable,
+    Request,
+    SliceSpec,
+)
+
+
+def make_table(model="m", a=0.004, c=0.0015):
+    t = ProfileTable()
+    for shape in [(3, 224, 224), (3, 112, 112), (3, 56, 56)]:
+        scale = shape[1] / 224.0
+        b = 1
+        while b <= 128:
+            t.record(model, shape, b, (a + c * b) * max(scale, 0.25))
+            b *= 2
+    return t
+
+
+CAT = Category("m", (3, 224, 224))
+
+
+class TestAdaptation:
+    def _overrun_then_normal(self, n_overruns):
+        """actual = 3x WCET for the first n_overruns jobs, then 0.9x."""
+        count = {"n": 0}
+
+        def actual_fn(job, wcet):
+            count["n"] += 1
+            return 3.0 * wcet if count["n"] <= n_overruns else 0.9 * wcet
+
+        return actual_fn
+
+    def test_overrun_triggers_shape_reduction(self):
+        table = make_table()
+        sched = DeepRT(
+            table, execution=ExecutionModel(actual_fn=self._overrun_then_normal(1))
+        )
+        r = Request(category=CAT, period=0.1, relative_deadline=0.4, n_frames=20)
+        assert sched.submit_request(r).admitted
+        sched.run()
+        assert sched.adaptation.shape_changes >= 1
+        # Some jobs must have executed at the reduced shape.
+        reduced = [
+            j for j in sched.worker.completed_jobs if j.shape_key == (3, 112, 112)
+        ]
+        assert reduced
+
+    def test_penalty_repaid_and_shape_restored(self):
+        table = make_table()
+        sched = DeepRT(
+            table, execution=ExecutionModel(actual_fn=self._overrun_then_normal(1))
+        )
+        r = Request(category=CAT, period=0.1, relative_deadline=0.4, n_frames=30)
+        assert sched.submit_request(r).admitted
+        sched.run()
+        assert sched.adaptation.restores >= 1
+        assert sched.adaptation.penalty(CAT) == 0.0
+        # After restoration, later jobs run at the original shape again.
+        assert sched.worker.completed_jobs[-1].shape_key == (3, 224, 224)
+
+    def test_disabled_adaptation_never_changes_shape(self):
+        table = make_table()
+        sched = DeepRT(
+            table,
+            execution=ExecutionModel(actual_fn=self._overrun_then_normal(5)),
+            adaptation_enabled=False,
+        )
+        r = Request(category=CAT, period=0.1, relative_deadline=0.4, n_frames=20)
+        assert sched.submit_request(r).admitted
+        sched.run()
+        assert all(
+            j.shape_key == (3, 224, 224) for j in sched.worker.completed_jobs
+        )
+
+    def test_overruns_counted(self):
+        table = make_table()
+        sched = DeepRT(
+            table, execution=ExecutionModel(actual_fn=self._overrun_then_normal(3))
+        )
+        r = Request(category=CAT, period=0.1, relative_deadline=0.4, n_frames=20)
+        assert sched.submit_request(r).admitted
+        m = sched.run()
+        assert m.overruns >= 1
+
+    def test_adaptation_reduces_misses_under_injected_overruns(self):
+        """The paper's Fig 10 claim, as a test: with heavy injected
+        overruns, enabling adaptation yields no more misses than without."""
+
+        def run(enabled):
+            table = make_table()
+            count = {"n": 0}
+
+            def actual_fn(job, wcet):
+                count["n"] += 1
+                return 4.0 * wcet if count["n"] % 7 == 3 else 0.95 * wcet
+
+            sched = DeepRT(
+                table,
+                execution=ExecutionModel(actual_fn=actual_fn),
+                adaptation_enabled=enabled,
+            )
+            for i in range(3):
+                r = Request(
+                    category=CAT, period=0.05, relative_deadline=0.2, n_frames=60
+                )
+                sched.submit_request(r)
+            return sched.run()
+
+        with_adapt = run(True)
+        without = run(False)
+        assert with_adapt.missed_frames <= without.missed_frames
+
+
+class TestClusterScheduler:
+    def _mk(self, n_slices=2):
+        cluster = ClusterScheduler()
+        for i in range(n_slices):
+            cluster.add_slice(SliceSpec(name=f"slice{i}", table=make_table()))
+        return cluster
+
+    def test_placement_spreads_load(self):
+        cluster = self._mk(2)
+        reqs = [
+            Request(category=CAT, period=0.05, relative_deadline=0.3, n_frames=40)
+            for _ in range(6)
+        ]
+        placed = [cluster.submit_request(r) for r in reqs]
+        assert all(placed)
+        names = set(cluster.placement.values())
+        assert len(names) == 2  # both slices used
+
+    def test_failure_reroutes_requests(self):
+        cluster = self._mk(2)
+        reqs = [
+            Request(category=CAT, period=0.05, relative_deadline=0.3, n_frames=200)
+            for _ in range(4)
+        ]
+        for r in reqs:
+            assert cluster.submit_request(r)
+        cluster.run(until=1.0)
+        victims = [
+            rid for rid, s in cluster.placement.items() if s == "slice0"
+        ]
+        lost = cluster.fail_slice("slice0")
+        cluster.run()
+        agg = cluster.aggregate_metrics()
+        if victims:
+            assert cluster.reroutes + len(lost) > 0
+        assert agg["completed_frames"] > 0
+
+    def test_overloaded_cluster_sheds(self):
+        cluster = self._mk(1)
+        results = [
+            cluster.submit_request(
+                Request(category=CAT, period=0.004, relative_deadline=0.05, n_frames=100)
+            )
+            for _ in range(30)
+        ]
+        assert not all(results)
+        assert cluster.dropped
+
+    def test_slow_slice_degrades_admission(self):
+        cluster = self._mk(1)
+        cluster.mark_slow("slice0", 4.0)
+        # WCETs now 4x: a workload that would fit at full speed is rejected.
+        r = Request(category=CAT, period=0.006, relative_deadline=0.03, n_frames=50)
+        assert not cluster.submit_request(r)
+
+    def test_zero_misses_survive_failover(self):
+        cluster = ClusterScheduler(
+            execution=ExecutionModel(actual_fn=lambda j, w: w)
+        )
+        for i in range(2):
+            cluster.add_slice(SliceSpec(name=f"s{i}", table=make_table()))
+        for _ in range(4):
+            cluster.submit_request(
+                Request(category=CAT, period=0.1, relative_deadline=0.4, n_frames=100)
+            )
+        cluster.run(until=2.0)
+        cluster.fail_slice("s0")
+        cluster.run()
+        agg = cluster.aggregate_metrics()
+        # Frames on surviving slices never miss (re-admitted tails are
+        # admission-tested before acceptance).
+        assert agg["miss_rate"] == 0.0
+
+
+class TestBaselines:
+    def test_batch_respects_fixed_size_under_saturation(self):
+        table = make_table()
+        loop = EventLoop()
+        b = BATCH(table, loop=loop, batch_size=4)
+        for _ in range(4):
+            b.submit_request(
+                Request(category=CAT, period=0.01, relative_deadline=0.5, n_frames=50)
+            )
+        m = b.run()
+        assert m.completed_frames == 200
+        assert max(m.batch_sizes) <= 4
+
+    def test_aimd_grows_batch_when_slo_met(self):
+        table = make_table()
+        b = AIMD(table)
+        b.submit_request(
+            Request(category=CAT, period=0.004, relative_deadline=1.0, n_frames=100)
+        )
+        m = b.run()
+        assert m.completed_frames == 100
+        assert max(m.batch_sizes) > 1  # additive growth happened
+
+    def test_batch_delay_flushes_on_timeout(self):
+        table = make_table()
+        b = BATCHDelay(table, batch_size=64, max_delay=0.02)
+        b.submit_request(
+            Request(category=CAT, period=0.05, relative_deadline=0.5, n_frames=10)
+        )
+        m = b.run()
+        assert m.completed_frames == 10
+        # Batches must have been released by the timeout, far below 64.
+        assert max(m.batch_sizes) < 64
+
+    def test_concurrent_baselines_slow_down_under_multitenancy(self):
+        """Processor sharing: two concurrent categories -> higher latency
+        than the same load run alone (paper Fig 2a)."""
+        table = make_table()
+        cat2 = Category("m", (3, 112, 112))
+
+        def run(cats):
+            b = BATCH(make_table(), batch_size=1)
+            for c in cats:
+                b.submit_request(
+                    Request(category=c, period=0.02, relative_deadline=10.0, n_frames=50)
+                )
+            m = b.run()
+            return sum(m.frame_latencies) / len(m.frame_latencies)
+
+        solo = run([CAT])
+        multi = run([CAT, cat2])
+        assert multi > solo

@@ -1,0 +1,204 @@
+"""Unit tests for the DeepRT core: DisBatcher, EDF worker, profiler."""
+import pytest
+
+from repro.core import (
+    Category,
+    DeepRT,
+    DisBatcher,
+    EventLoop,
+    ExecutionModel,
+    Frame,
+    ProfileTable,
+    Request,
+    WINDOW_FRACTION,
+)
+
+CAT = Category(model_id="m", shape_key=(3, 224, 224))
+
+
+def make_table(a=0.004, c=0.0015, model="m", shape=(3, 224, 224), bmax=128):
+    t = ProfileTable()
+    b = 1
+    while b <= bmax:
+        t.record(model, shape, b, a + c * b)
+        b *= 2
+    return t
+
+
+class TestProfileTable:
+    def test_exact_lookup(self):
+        t = make_table()
+        assert t.wcet("m", (3, 224, 224), 4) == pytest.approx(0.004 + 0.0015 * 4)
+
+    def test_rounds_up_unprofiled(self):
+        t = make_table()
+        # batch 5 -> rounds to 8 (conservative)
+        assert t.wcet("m", (3, 224, 224), 5) == pytest.approx(0.004 + 0.0015 * 8)
+
+    def test_extrapolates_beyond_table(self):
+        t = make_table(bmax=8)
+        w8 = t.wcet("m", (3, 224, 224), 8)
+        w16 = t.wcet("m", (3, 224, 224), 16)
+        assert w16 == pytest.approx(w8 + 0.0015 * 8)
+
+    def test_monotone_in_batch(self):
+        t = make_table()
+        prev = 0.0
+        for b in range(1, 200):
+            w = t.wcet("m", (3, 224, 224), b)
+            assert w >= prev - 1e-12
+            prev = w
+
+    def test_zero_batch_is_free(self):
+        assert make_table().wcet("m", (3, 224, 224), 0) == 0.0
+
+    def test_capacity_scale(self):
+        t = make_table()
+        assert t.scaled(2.0).wcet("m", (3, 224, 224), 1) == pytest.approx(
+            2 * t.wcet("m", (3, 224, 224), 1)
+        )
+
+    def test_json_roundtrip(self):
+        t = make_table()
+        t2 = ProfileTable.from_json(t.to_json())
+        assert t2.wcet("m", (3, 224, 224), 4) == t.wcet("m", (3, 224, 224), 4)
+
+    def test_missing_profile_raises(self):
+        with pytest.raises(KeyError):
+            make_table().wcet("nope", (1,), 1)
+
+
+class TestDisBatcher:
+    def _collect(self):
+        jobs = []
+        loop = EventLoop()
+        db = DisBatcher(loop, emit=jobs.append)
+        return loop, db, jobs
+
+    def test_window_is_half_min_deadline(self):
+        loop, db, jobs = self._collect()
+        r1 = Request(category=CAT, period=0.1, relative_deadline=0.4, n_frames=3)
+        r2 = Request(category=CAT, period=0.1, relative_deadline=0.2, n_frames=3)
+        db.add_request(r1)
+        assert db.window_of(CAT) == pytest.approx(WINDOW_FRACTION * 0.4)
+        db.add_request(r2)
+        assert db.window_of(CAT) == pytest.approx(WINDOW_FRACTION * 0.2)
+
+    def test_frames_in_same_window_batch_together(self):
+        loop, db, jobs = self._collect()
+        r = Request(category=CAT, period=0.01, relative_deadline=0.5, n_frames=5)
+        db.add_request(r)  # window 0.25
+        for i in range(5):
+            loop.schedule(
+                i * 0.01,
+                lambda i=i: db.on_frame(
+                    Frame(r.request_id, CAT, i, loop.now, loop.now + 0.5)
+                ),
+            )
+        loop.run(until=0.3)
+        assert len(jobs) == 1
+        assert jobs[0].batch_size == 5
+        assert jobs[0].release_time == pytest.approx(0.25)
+        assert jobs[0].relative_deadline == pytest.approx(0.25)
+
+    def test_job_deadline_bounds_frame_deadlines(self):
+        # Theorem 1's structural core: job deadline <= every frame deadline.
+        loop, db, jobs = self._collect()
+        r = Request(category=CAT, period=0.04, relative_deadline=0.3, n_frames=20)
+        db.add_request(r)
+        for i in range(20):
+            loop.schedule(
+                r.frame_arrival(i),
+                lambda i=i: db.on_frame(
+                    Frame(r.request_id, CAT, i, loop.now, loop.now + 0.3)
+                ),
+            )
+        loop.run()
+        assert sum(j.batch_size for j in jobs) == 20
+        for j in jobs:
+            for f in j.frames:
+                assert j.deadline <= f.deadline + 1e-9
+
+    def test_early_flush(self):
+        loop, db, jobs = self._collect()
+        r = Request(category=CAT, period=0.1, relative_deadline=1.0, n_frames=1)
+        db.add_request(r)  # window 0.5
+        loop.schedule(
+            0.01,
+            lambda: db.on_frame(Frame(r.request_id, CAT, 0, 0.01, 1.01)),
+        )
+        loop.schedule(0.02, lambda: db.flush_early())
+        loop.run(until=0.03)
+        assert len(jobs) == 1 and jobs[0].release_time == pytest.approx(0.02)
+
+    def test_category_timer_restarts_for_late_request(self):
+        loop, db, jobs = self._collect()
+        r1 = Request(category=CAT, period=0.05, relative_deadline=0.2, n_frames=2)
+        db.add_request(r1)
+        loop.run(until=5.0)  # r1 exhausted, timer retired
+        r2 = Request(
+            category=CAT, period=0.05, relative_deadline=0.2, n_frames=2, start_time=5.0
+        )
+        db.add_request(r2)
+        loop.schedule(5.0, lambda: db.on_frame(Frame(r2.request_id, CAT, 0, 5.0, 5.2)))
+        loop.run(until=6.0)
+        assert sum(j.batch_size for j in jobs) == 1
+
+    def test_nonrt_uses_large_window(self):
+        loop, db, jobs = self._collect()
+        nrt = Category(model_id="m", shape_key=(3, 224, 224), realtime=False)
+        r = Request(category=nrt, period=0.05, relative_deadline=0.1, n_frames=2)
+        db.add_request(r)
+        assert db.window_of(nrt) == pytest.approx(10.0)
+
+
+class TestDeepRTSystem:
+    def test_exact_wcet_zero_misses(self):
+        table = make_table()
+        sched = DeepRT(table, execution=ExecutionModel(actual_fn=lambda j, w: w))
+        reqs = [
+            Request(category=CAT, period=0.05, relative_deadline=0.2, n_frames=40),
+            Request(category=CAT, period=0.03, relative_deadline=0.3, n_frames=60),
+            Request(category=CAT, period=0.08, relative_deadline=0.15, n_frames=30),
+        ]
+        admitted = [r for r in reqs if sched.submit_request(r).admitted]
+        m = sched.run()
+        assert admitted, "expected at least one admission"
+        assert m.missed_frames == 0
+        assert m.completed_frames == sum(r.n_frames for r in admitted)
+
+    def test_rejected_requests_get_no_frames(self):
+        table = make_table()
+        sched = DeepRT(table)
+        # Infeasible: per-frame cost >> deadline budget
+        r = Request(category=CAT, period=0.001, relative_deadline=0.002, n_frames=100)
+        res = sched.submit_request(r)
+        assert not res.admitted
+        m = sched.run()
+        assert m.completed_frames == 0
+
+    def test_nonrt_bypasses_admission_and_completes(self):
+        table = make_table()
+        nrt = Category(model_id="m", shape_key=(3, 224, 224), realtime=False)
+        sched = DeepRT(table)
+        r = Request(category=nrt, period=0.01, relative_deadline=0.1, n_frames=5)
+        res = sched.submit_request(r)
+        assert res.admitted and res.phase == 0
+        m = sched.run()
+        assert m.completed_frames == 5
+
+    def test_edf_ordering_across_categories(self):
+        table = make_table()
+        for b in [1, 2, 4, 8]:
+            table.record("m2", (3, 112, 112), b, 0.002 + 0.001 * b)
+        cat2 = Category(model_id="m2", shape_key=(3, 112, 112))
+        sched = DeepRT(table, execution=ExecutionModel(actual_fn=lambda j, w: w))
+        r1 = Request(category=CAT, period=0.1, relative_deadline=0.4, n_frames=10)
+        r2 = Request(category=cat2, period=0.1, relative_deadline=0.1, n_frames=10)
+        assert sched.submit_request(r1).admitted
+        assert sched.submit_request(r2).admitted
+        m = sched.run()
+        assert m.missed_frames == 0
+        # Tight-deadline category jobs must not be starved by the loose one.
+        jobs = sched.worker.completed_jobs
+        assert any(j.category == cat2 for j in jobs)

@@ -1,0 +1,91 @@
+"""Non-RT request support (paper §3.3) and launcher end-to-end drills."""
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Category, DeepRT, ExecutionModel, ProfileTable, Request
+
+
+def make_table():
+    t = ProfileTable()
+    for b in [1, 2, 4, 8, 16, 32]:
+        t.record("m", (3, 224, 224), b, 0.004 + 0.0015 * b)
+    return t
+
+
+class TestNonRealtime:
+    def test_nonrt_never_causes_rt_miss(self):
+        """Paper §3.3: non-RT requests batch under a large window with a
+        background-server guard — RT deadlines stay intact even when
+        non-RT load is heavy."""
+        table = make_table()
+        sched = DeepRT(table, execution=ExecutionModel(actual_fn=lambda j, w: w))
+        rt = Category("m", (3, 224, 224), realtime=True)
+        nrt = Category("m", (3, 224, 224), realtime=False)
+        r_rt = Request(category=rt, period=0.05, relative_deadline=0.2, n_frames=60)
+        assert sched.submit_request(r_rt).admitted
+        # Heavy non-RT stream (bypasses admission by design).
+        for _ in range(3):
+            r = Request(category=nrt, period=0.001, relative_deadline=9.0, n_frames=50)
+            res = sched.submit_request(r)
+            assert res.admitted and res.phase == 0
+        m = sched.run()
+        rt_missed = [
+            k for k, (a, d, c) in m.frame_records.items()
+            if k[0] == r_rt.request_id and c > d + 1e-9
+        ]
+        assert not rt_missed, f"non-RT load caused RT misses: {rt_missed}"
+
+    def test_nonrt_work_completes_in_slack(self):
+        table = make_table()
+        sched = DeepRT(table)
+        nrt = Category("m", (3, 224, 224), realtime=False)
+        r = Request(category=nrt, period=0.01, relative_deadline=5.0, n_frames=10)
+        sched.submit_request(r)
+        m = sched.run()
+        assert m.completed_frames == 10
+
+    def test_nonrt_batch_cap_bounds_jobs(self):
+        from repro.core.scheduler import NONRT_BATCH_CAP
+
+        table = make_table()
+        sched = DeepRT(table)
+        nrt = Category("m", (3, 224, 224), realtime=False)
+        r = Request(category=nrt, period=0.001, relative_deadline=9.0, n_frames=64)
+        sched.submit_request(r)
+        sched.run()
+        assert max(
+            j.batch_size for j in sched.worker.completed_jobs
+        ) <= max(NONRT_BATCH_CAP, 1)
+
+
+@pytest.mark.slow
+class TestLaunchers:
+    def test_train_launcher_with_crash_resume(self, tmp_path):
+        """Full fault-tolerance drill through the real CLI: train, crash,
+        resume from checkpoint, finish."""
+        base = [
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", "granite-3-2b", "--tiny",
+            "--steps", "12", "--batch", "2", "--seq", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "5",
+        ]
+        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+        import os
+
+        env.update({k: v for k, v in os.environ.items() if k not in env})
+        env["PYTHONPATH"] = "src"
+        r1 = subprocess.run(
+            base + ["--fail-at", "7"], capture_output=True, text=True, env=env,
+            cwd="/root/repo", timeout=600,
+        )
+        assert "simulated failure" in (r1.stdout + r1.stderr)
+        r2 = subprocess.run(
+            base, capture_output=True, text=True, env=env, cwd="/root/repo",
+            timeout=600,
+        )
+        assert r2.returncode == 0, r2.stderr[-2000:]
+        assert "resuming from checkpoint step 5" in r2.stdout
+        assert "step   11" in r2.stdout
