@@ -22,6 +22,7 @@ SUITES = [
     ("fig9_admission_runtime", "benchmarks.admission_runtime"),
     ("fig10_adaptation", "benchmarks.adaptation"),
     ("roofline_table", "benchmarks.roofline_report"),
+    ("serving_hotpath", "benchmarks.serving_hotpath"),
 ]
 
 

@@ -8,6 +8,7 @@ from repro.core.admission import (
     snapshot_from_scheduler,
 )
 from repro.core.baselines import AIMD, BATCH, BATCHDelay, SEDF
+from repro.core.bucketing import bucket, bucket_sizes, padding_fraction
 from repro.core.cluster import ClusterScheduler, Slice, SliceSpec
 from repro.core.disbatcher import WINDOW_FRACTION, DisBatcher
 from repro.core.edf import DeadlineQueue, EDFWorker
@@ -40,6 +41,9 @@ __all__ = [
     "BATCH",
     "BATCHDelay",
     "SEDF",
+    "bucket",
+    "bucket_sizes",
+    "padding_fraction",
     "ClusterScheduler",
     "Slice",
     "SliceSpec",

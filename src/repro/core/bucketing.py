@@ -1,0 +1,51 @@
+"""Shared batch-bucket rounding for the live engine and the imitator.
+
+The serving engine compiles one XLA program per (model, kind, seq bucket,
+batch bucket), padding the true batch size up to the next power of two so
+the compile count stays logarithmic. The admission imitator charges each
+pseudo-job the WCET of the batch the engine will *actually run* — so both
+sides MUST round through this one function. Any drift (engine pads to 8,
+admission charges the batch-6 profile) silently breaks the Phase-2
+guarantee: the imitator's timeline would be faster than reality.
+
+Keep this module dependency-free; it is imported by the engine, the
+profiler, and the admission path.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+def bucket(n: int) -> int:
+    """Next power of two >= n (the batch bucket the engine executes).
+
+    ``bucket(0) == 0`` so zero-frame lookups stay free; negative sizes are
+    a caller bug and raise.
+    """
+    if n < 0:
+        raise ValueError(f"batch size must be >= 0, got {n}")
+    if n <= 1:
+        return n
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_sizes(max_batch: int) -> List[int]:
+    """All buckets up to and including ``bucket(max_batch)``: 1, 2, 4, ...
+
+    The canonical profiling grid — profiling exactly the buckets makes
+    every conservative table lookup an exact hit.
+    """
+    if max_batch <= 0:
+        return []
+    out = [1]
+    while out[-1] < bucket(max_batch):
+        out.append(out[-1] * 2)
+    return out
+
+
+def padding_fraction(true_batch: int, bucket_batch: int = 0) -> float:
+    """Fraction of executed batch slots that carry no real frame."""
+    bb = bucket_batch or bucket(true_batch)
+    if bb <= 0:
+        return 0.0
+    return (bb - true_batch) / bb

@@ -17,9 +17,13 @@ interface but provide two backends:
   re-admission must not wait for a full re-profile).
 
 Both produce a ``ProfileTable``. Lookups for unprofiled batch sizes are
-*conservative*: we round the batch size up to the next profiled size (a
-larger batch never executes faster per the paper's Fig 2c), falling back to
-linear extrapolation from the two largest profiled points beyond the table.
+*conservative*: the batch is first rounded up to its power-of-two bucket —
+the batch the serving engine actually executes (``repro.core.bucketing``)
+— then to the next profiled size (a larger batch never executes faster per
+the paper's Fig 2c), falling back to linear extrapolation from the two
+largest profiled points beyond the table. Because the engine, the profiler
+grid, and this lookup all round through the one shared ``bucket``, the
+WCET charged by admission is the WCET of the program that really runs.
 """
 from __future__ import annotations
 
@@ -30,6 +34,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.bucketing import bucket
 from repro.core.request import Category
 
 ShapeKey = Tuple[int, ...]
@@ -76,8 +81,13 @@ class ProfileTable:
             ) from None
         if batch_size in table:
             return table[batch_size] * self.capacity_scale
+        # Not profiled at the true size: charge the bucket the engine will
+        # actually execute (identical rounding to serving/engine.py).
+        b = bucket(batch_size)
+        if b in table:
+            return table[b] * self.capacity_scale
         sizes = sorted(table)
-        pos = bisect.bisect_left(sizes, batch_size)
+        pos = bisect.bisect_left(sizes, b)
         if pos < len(sizes):
             # Round up to the next profiled batch size (conservative).
             return table[sizes[pos]] * self.capacity_scale
@@ -85,11 +95,11 @@ class ProfileTable:
         # (batching curves are ~affine in batch size at large batch).
         if len(sizes) == 1:
             per = table[sizes[-1]] / sizes[-1]
-            return per * batch_size * self.capacity_scale
+            return per * b * self.capacity_scale
         b1, b2 = sizes[-2], sizes[-1]
         t1, t2 = table[b1], table[b2]
         slope = max((t2 - t1) / (b2 - b1), 0.0)
-        return (t2 + slope * (batch_size - b2)) * self.capacity_scale
+        return (t2 + slope * (b - b2)) * self.capacity_scale
 
     def wcet_for(self, category: Category, batch_size: int) -> float:
         return self.wcet(category.model_id, category.shape_key, batch_size)
@@ -170,10 +180,20 @@ class MeasuredProfiler:
         shape_key: ShapeKey,
         batch_sizes: List[int],
         step_fn: Callable[[int], None],
+        bucketed: bool = True,
     ) -> None:
         """``step_fn(batch_size)`` must execute one full batched step
-        synchronously (for JAX: call ``.block_until_ready()`` inside)."""
-        for b in batch_sizes:
+        synchronously (for JAX: call ``.block_until_ready()`` inside).
+
+        ``bucketed`` (default): batch sizes are rounded to their engine
+        bucket first and each distinct bucket is measured ONCE — the
+        engine compiles and pads identically for every true size within a
+        bucket, so measuring 3 and 4 separately would time the same XLA
+        program twice. The measurement is recorded under the bucket,
+        which is exactly the key ``ProfileTable.wcet`` consults.
+        """
+        targets = sorted({bucket(b) for b in batch_sizes}) if bucketed else batch_sizes
+        for b in targets:
             for _ in range(self.warmup):
                 step_fn(b)
             samples = []

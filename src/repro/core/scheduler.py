@@ -59,6 +59,7 @@ class DeepRT:
         shrink_fn=default_shrink,
         utilization_bound: float = 1.0,
         early_flush: bool = True,
+        device=None,
     ):
         """``early_flush`` enables the paper's idle-device optimization
         (§4.3). It is guarded (see DisBatcher.flush_early) so Theorem 1's
@@ -66,7 +67,12 @@ class DeepRT:
         / 2.6M frames), but it can perturb the EDF order relative to the
         Phase-2 imitator's timeline by up to one job's non-preemptive
         blocking, so per-frame latency *predictions* are only strictly
-        conservative with ``early_flush=False`` (strict mode)."""
+        conservative with ``early_flush=False`` (strict mode).
+
+        ``device`` swaps the execution backend behind the shared device
+        contract (see ``simulator.SequentialDevice``): ``None`` builds a
+        simulated ``SequentialDevice``; live serving passes an
+        ``AsyncDevice`` so the loop never blocks on XLA."""
         self.loop = loop if loop is not None else EventLoop()
         self.table = table
         self.execution = execution if execution is not None else ExecutionModel()
@@ -74,7 +80,11 @@ class DeepRT:
         self.early_flush = early_flush
         self.metrics = Metrics()
 
-        self.device = SequentialDevice(self.loop, on_idle=self._on_device_idle)
+        if device is None:
+            device = SequentialDevice(self.loop, on_idle=self._on_device_idle)
+        else:
+            device.on_idle = self._on_device_idle
+        self.device = device
         self.worker = EDFWorker(
             loop=self.loop,
             device=self.device,

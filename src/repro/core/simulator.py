@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import threading
 import time as _time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -94,8 +95,17 @@ class EventLoop:
 class WallClock:
     """Wall-clock stand-in with the same scheduling interface.
 
-    Used by the live serving path (examples/serve_multitenant.py). ``run``
-    blocks on real time; callbacks execute in-thread.
+    Used by the live serving path (examples/serve_multitenant.py).
+    Callbacks execute on the thread that called ``run``; ``run`` sleeps on
+    a condition variable until *exactly* the next event time (no coarse
+    polling granularity — live window joints fire on time) and wakes
+    immediately when another thread posts work via ``post``.
+
+    Cross-thread protocol (used by ``serving.async_device.AsyncDevice``):
+    - ``post(fn, priority)``    — thread-safe "schedule at now + wake up";
+    - ``hold()`` / ``release()``— keep ``run`` alive while external work
+      (an in-flight device execution) will post a future completion even
+      though the heap is momentarily empty.
     """
 
     PRIO_ARRIVAL = 0
@@ -108,35 +118,68 @@ class WallClock:
         self._heap: list = []
         self._seq = itertools.count()
         self._cancelled: set = set()
+        self._cond = threading.Condition()
+        self._holds = 0
 
     @property
     def now(self) -> float:
         return _time.perf_counter() - self._t0
 
     def schedule(self, when: float, fn: Callable[[], None], priority: int = 1) -> int:
-        eid = next(self._seq)
-        heapq.heappush(self._heap, (when, priority, eid, fn))
-        return eid
+        with self._cond:
+            eid = next(self._seq)
+            heapq.heappush(self._heap, (when, priority, eid, fn))
+            self._cond.notify_all()
+            return eid
 
     def schedule_in(self, delay: float, fn: Callable[[], None], priority: int = 1) -> int:
         return self.schedule(self.now + delay, fn, priority)
+
+    def post(self, fn: Callable[[], None], priority: int = 1) -> int:
+        """Thread-safe: enqueue ``fn`` at the current instant and wake the
+        loop thread. The completion path of the async device."""
+        return self.schedule(self.now, fn, priority)
+
+    def hold(self) -> None:
+        with self._cond:
+            self._holds += 1
+
+    def release(self) -> None:
+        with self._cond:
+            self._holds -= 1
+            self._cond.notify_all()
 
     def cancel(self, event_id: int) -> None:
         self._cancelled.add(event_id)
 
     def run(self, until: Optional[float] = None) -> None:
-        while self._heap:
-            when, _prio, eid, fn = self._heap[0]
-            if until is not None and when > until:
-                break
-            now = self.now
-            if when > now:
-                _time.sleep(min(when - now, 0.05))
-                continue
-            heapq.heappop(self._heap)
-            if eid in self._cancelled:
-                self._cancelled.discard(eid)
-                continue
+        while True:
+            fn = None
+            with self._cond:
+                while True:
+                    if self._heap:
+                        when, _prio, eid, _fn = self._heap[0]
+                        if until is not None and when > until:
+                            return
+                        wait = when - self.now
+                        if wait <= 0:
+                            heapq.heappop(self._heap)
+                            if eid in self._cancelled:
+                                self._cancelled.discard(eid)
+                                continue
+                            fn = _fn
+                            break
+                        # Sleep until exactly the next event (or a post()).
+                        self._cond.wait(timeout=wait)
+                    elif self._holds > 0:
+                        # Heap empty but a device execution is in flight;
+                        # its completion will be post()ed from the waiter.
+                        if until is not None and self.now > until:
+                            return
+                        self._cond.wait(timeout=0.05)
+                    else:
+                        return
+            # Execute outside the lock: callbacks may schedule() freely.
             fn()
 
 
@@ -153,6 +196,27 @@ class SequentialDevice:
 
     ``submit`` is only legal when idle; the caller (the EDF worker)
     enforces non-preemptive sequential execution.
+
+    THE DEVICE CONTRACT — shared by this simulated device and the live
+    ``repro.serving.async_device.AsyncDevice`` (and anything future PRs
+    add: multi-device sharding, cluster slices):
+
+    - ``submit(job, exec_time, on_complete, job_bytes=0.0)``: start one
+      job. ``exec_time`` is the caller's best estimate (simulation: the
+      sampled "actual"; live: the profiled WCET) — it drives
+      ``busy_until`` and, for simulated devices only, the completion
+      instant. ``on_complete(job, now)`` fires exactly once, on the loop
+      thread, at the job's completion time.
+    - ``idle`` / ``busy_until``: scheduling state the EDF worker and the
+      admission snapshot read; ``busy_until`` is an estimate for live
+      devices (actual completion may land earlier or later).
+    - ``on_idle``: zero-arg callback invoked after each completion; the
+      scheduler wires it to the EDF worker's dispatch.
+
+    The whole point of the contract is that host-side scheduling overlaps
+    device execution identically in simulation and live serving: the
+    simulated loop keeps processing events while a job "runs", and the
+    async device keeps the wall-clock loop free while XLA executes.
     """
 
     def __init__(self, loop: EventLoop, on_idle: Optional[Callable[[], None]] = None):
@@ -285,6 +349,14 @@ class Metrics:
     frame_latencies: List[float] = field(default_factory=list)
     job_count: int = 0
     batch_sizes: List[int] = field(default_factory=list)
+    # Padding accounting: real frames vs. executed bucket slots per job.
+    real_rows: int = 0
+    bucket_rows: int = 0
+    # Host-side scheduler time per dispatch decision (seconds) — the time
+    # the event loop is stalled picking + submitting a job. With async
+    # dispatch this is microseconds; with blocking dispatch it includes
+    # the whole device execution.
+    dispatch_overheads: List[float] = field(default_factory=list)
     overruns: int = 0
     first_arrival: Optional[float] = None
     last_completion: float = 0.0
@@ -307,9 +379,18 @@ class Metrics:
             self.missed_frames += 1
             self.overdue_times.append(frame.overdue)
 
-    def record_job(self, batch_size: int) -> None:
+    def record_job(self, batch_size: int, bucket_size: Optional[int] = None) -> None:
+        """``bucket_size`` is the executed batch-slot count; callers whose
+        execution model pads (the EDF worker over the bucketing engine)
+        pass it explicitly. Default = no padding (baselines on the
+        processor-sharing device run true batch sizes)."""
         self.job_count += 1
         self.batch_sizes.append(batch_size)
+        self.real_rows += batch_size
+        self.bucket_rows += bucket_size if bucket_size is not None else batch_size
+
+    def record_dispatch_overhead(self, seconds: float) -> None:
+        self.dispatch_overheads.append(seconds)
 
     @property
     def miss_rate(self) -> float:
@@ -328,3 +409,17 @@ class Metrics:
     @property
     def mean_batch(self) -> float:
         return sum(self.batch_sizes) / len(self.batch_sizes) if self.batch_sizes else 0.0
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of executed batch-bucket slots carrying no real frame."""
+        if self.bucket_rows == 0:
+            return 0.0
+        return 1.0 - self.real_rows / self.bucket_rows
+
+    @property
+    def mean_dispatch_overhead(self) -> float:
+        """Mean host-side scheduler stall per job dispatch (seconds)."""
+        if not self.dispatch_overheads:
+            return 0.0
+        return sum(self.dispatch_overheads) / len(self.dispatch_overheads)

@@ -10,7 +10,12 @@ scratch across kv blocks; output written on the last block.
 Masking is fully position-driven: the caller passes per-slot absolute
 positions and a validity bitmap, so full caches, ring (sliding-window)
 caches, and continuous-batching caches with per-sequence cursors all use
-the same kernel.
+the same kernel. Fully-masked kv blocks are SKIPPED (``pl.when``), which
+is bit-identical for any row with at least one live slot and is what
+makes batch-bucket padding cheap: the serving engine parks pad rows at
+cursor 0, so their blocks past the first do no MXU work. A row with zero
+live slots outputs exact 0 (the mathematically sensible "attended to
+nothing"), not the uniform mean-of-V an unskipped softmax would give.
 
 The serving engine's decode hot loop is THE perf-critical path of the
 DeepRT reproduction (batched decode job instances are what the GPU/TPU
@@ -55,29 +60,37 @@ def _kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0, :, :]  # (G, D)
-    k = k_ref[0, :, 0, :]  # (bk, D)
-    v = v_ref[0, :, 0, :]
     cursor = cursor_ref[0, 0]
     pos = pos_ref[0, :]  # (bk,)
     valid = valid_ref[0, :] != 0
 
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) * scale  # (G, bk)
     mask = jnp.logical_and(pos <= cursor, valid)
     if window is not None:
         mask = jnp.logical_and(mask, pos > cursor - window)
-    s = jnp.where(mask[None, :], s, NEG_INF)
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    m_ref[...] = m_new
+
+    # Skip fully-masked kv blocks: a masked block's contribution is
+    # exactly zero (p underflows to 0, alpha = 1), so eliding the two
+    # MXU matmuls is bit-identical. This is what makes masked batch
+    # padding cheap — a pad row with cursor 0 skips every block past its
+    # first, and a ring cache skips its unwritten tail.
+    @pl.when(jnp.any(mask))
+    def _accumulate():
+        k = k_ref[0, :, 0, :]  # (bk, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, bk)
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
 
     @pl.when(ki == n_kv_blocks - 1)
     def _write():

@@ -12,6 +12,12 @@ Cache kinds per block type:
 - rglru : Griffin state {h: (B, d_rnn), conv: (B, 3, d_rnn)}
 - rwkv  : {shift: (B, D), wkv: (B, H, hd, hd), channel: (B, D)}
 - cross : encoder K/V, written once at encode time (whisper)
+
+Donation: every write helper is expressed as ``cache.at[...].set`` /
+``dynamic_update_slice`` on the *input* cache, so a step jitted with the
+cache in ``donate_argnums`` updates the buffers IN PLACE — the serving
+engine's decode loop allocates O(batch) per step instead of copying the
+whole cache (see serving/engine.py).
 """
 from __future__ import annotations
 
@@ -19,6 +25,15 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def cache_nbytes(cache) -> int:
+    """Total on-device bytes of a cache pytree (resident-memory metrics)."""
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(cache)
+        if hasattr(x, "dtype")
+    )
 
 
 def attn_cache_init(batch: int, max_len: int, n_kv: int, head_dim: int, dtype):

@@ -1,0 +1,134 @@
+"""AsyncDevice: the live-serving side of the shared device contract.
+
+``SequentialDevice`` (core/simulator.py) models a one-program-at-a-time
+accelerator in virtual time: ``submit`` returns immediately and the
+completion fires as a future loop event, so host-side scheduling overlaps
+device execution. This class gives the LIVE wall-clock path the exact
+same shape:
+
+- ``submit`` launches the job through JAX async dispatch (``dispatch_fn``
+  returns a ``StepHandle`` without blocking) and returns to the event
+  loop immediately — DisBatcher window joints, admission tests, and
+  adaptation all run while XLA executes;
+- a single lightweight waiter thread blocks on ``handle.wait()``
+  (``block_until_ready`` underneath) and posts the completion back onto
+  the loop thread via ``WallClock.post`` — callbacks never run off-loop;
+- ``busy_until`` is the profiled *estimate* (the submit-time
+  ``exec_time``), which is what the admission snapshot reads; the actual
+  completion instant is whatever the hardware delivers.
+
+The EDF worker's submit-only-when-idle discipline is unchanged, so the
+non-preemptive EDF semantics (and the Phase-2 imitator's model of them)
+are identical to simulation — the only difference is that the loop no
+longer stalls for the duration of each job.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+
+class AsyncDevice:
+    """Wall-clock sequential device with non-blocking dispatch.
+
+    Parameters
+    ----------
+    loop:
+        A ``WallClock`` (needs ``post``/``hold``/``release``).
+    dispatch_fn:
+        job -> handle. Must launch the job without blocking and return a
+        handle whose ``wait()`` blocks until device completion (see
+        ``serving.engine.StepHandle``).
+    """
+
+    def __init__(
+        self,
+        loop,
+        dispatch_fn: Callable[[object], object],
+        on_idle: Optional[Callable[[], None]] = None,
+    ):
+        self.loop = loop
+        self.dispatch_fn = dispatch_fn
+        self.on_idle = on_idle
+        self._busy_until: Optional[float] = None
+        self.last_error: Optional[Exception] = None
+        self.busy_time = 0.0  # total measured seconds executing
+        self.resident_bytes = 0.0
+        self.peak_bytes = 0.0
+        self._inbox: "queue.Queue" = queue.Queue()
+        self._waiter = threading.Thread(
+            target=self._wait_loop, name="asyncdevice-waiter", daemon=True
+        )
+        self._waiter.start()
+
+    @property
+    def idle(self) -> bool:
+        return self._busy_until is None
+
+    @property
+    def busy_until(self) -> Optional[float]:
+        return self._busy_until
+
+    def submit(
+        self,
+        job: object,
+        exec_time: float,
+        on_complete: Callable[[object, float], None],
+        job_bytes: float = 0.0,
+    ) -> None:
+        """Non-blocking: async-dispatch the job, hand the handle to the
+        waiter, return to the loop. ``exec_time`` is the estimate used
+        for ``busy_until`` only (contract: simulator.SequentialDevice)."""
+        if not self.idle:
+            raise RuntimeError("AsyncDevice is busy; EDF worker bug")
+        start = self.loop.now
+        self._busy_until = start + exec_time
+        self.resident_bytes += job_bytes
+        self.peak_bytes = max(self.peak_bytes, self.resident_bytes)
+        handle = self.dispatch_fn(job)  # returns immediately (JAX async)
+        self.loop.hold()  # keep run() alive while the heap may be empty
+        self._inbox.put((job, handle, on_complete, job_bytes, start))
+
+    # ----- waiter thread --------------------------------------------------
+    def _wait_loop(self) -> None:
+        while True:
+            item = self._inbox.get()
+            if item is None:
+                return
+            job, handle, on_complete, job_bytes, start = item
+            err = None
+            try:
+                handle.wait()
+            except Exception as e:  # re-raised on the loop thread
+                err = self.last_error = e
+            self.loop.post(
+                lambda j=job, cb=on_complete, bts=job_bytes, s=start, x=err: (
+                    self._complete(j, cb, bts, s, x)
+                ),
+                priority=getattr(self.loop, "PRIO_COMPLETE", 1),
+            )
+            self.loop.release()
+
+    # ----- loop-thread completion ----------------------------------------
+    def _complete(
+        self, job, on_complete, job_bytes: float, start: float,
+        err: Optional[Exception] = None,
+    ) -> None:
+        now = self.loop.now
+        self.busy_time += now - start
+        self._busy_until = None
+        self.resident_bytes -= job_bytes
+        if err is not None:
+            # A failed execution must NOT be reported as a completed job
+            # (frames would count as deadline-met with no output). Device
+            # state is released, then the failure propagates out of
+            # loop.run() to the caller.
+            raise RuntimeError(f"device execution failed for {job!r}") from err
+        on_complete(job, now)
+        if self.on_idle is not None:
+            self.on_idle()
+
+    def close(self) -> None:
+        """Stop the waiter thread (idempotent; optional — it's a daemon)."""
+        self._inbox.put(None)

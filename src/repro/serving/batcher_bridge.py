@@ -3,10 +3,18 @@
 Live serving uses the identical scheduler objects as simulation, with
 two swaps:
 - the event loop is a WallClock;
-- the EDF worker's ``exec_time_fn`` EXECUTES the job synchronously on
-  the engine and returns the measured wall time (the device is
-  sequential, so blocking the loop for the duration of one job is
-  precisely DeepRT's non-preemptive execution model — paper §4.3).
+- the device is an ``AsyncDevice``: the EDF worker's submit launches the
+  job via non-blocking JAX dispatch and the loop keeps scheduling
+  (DisBatcher window joints, admission, adaptation) while XLA executes —
+  exactly the overlap the ``SequentialDevice`` simulation models. The
+  completion lands back on the loop thread from a lightweight waiter
+  keyed off ``block_until_ready``.
+
+``dispatch="sync"`` recreates the old blocking path (the EDF worker's
+``exec_time_fn`` runs the job synchronously and stalls the loop for its
+duration). It exists ONLY as the A/B baseline for
+``benchmarks/serving_hotpath.py`` and will be removed once the async
+path has a few PRs of mileage — do not build on it.
 
 ``build_live_scheduler`` also runs the offline Performance Profiler
 (paper §4.1) over the engine to produce the WCET table the Admission
@@ -22,9 +30,23 @@ from repro.core import (
     ExecutionModel,
     MeasuredProfiler,
     ProfileTable,
+    SequentialDevice,
     WallClock,
 )
+from repro.serving.async_device import AsyncDevice
 from repro.serving.engine import InferenceEngine
+
+
+class _BlockingDevice(SequentialDevice):
+    """Sync-arm device: by the time the EDF worker calls ``submit`` the
+    job has ALREADY executed (exec_time_fn blocked the loop for its
+    duration), so the completion fires immediately instead of being
+    re-scheduled ``exec_time`` in the future — which would double-count
+    every job's duration in latencies and busy_until."""
+
+    def submit(self, job, exec_time, on_complete, job_bytes=0.0):
+        super().submit(job, 0.0, on_complete, job_bytes)
+        self.busy_time += exec_time
 
 
 def profile_engine(
@@ -35,7 +57,8 @@ def profile_engine(
     quantile: float = 0.99,
 ) -> ProfileTable:
     """Offline profiler pass (paper §4.1): p99 over repeated runs per
-    (model, shape, batch)."""
+    (model, shape, batch bucket). Batch sizes are deduped to buckets —
+    the engine executes the identical program for every size in one."""
     table = ProfileTable()
     profiler = MeasuredProfiler(warmup=2, runs=runs, quantile=quantile)
     for mid, shape_key, kind in categories:
@@ -54,22 +77,61 @@ def build_live_scheduler(
     categories: Iterable[Tuple[str, Tuple[int, ...], str]],
     batch_sizes=(1, 2, 4, 8),
     utilization_bound: float = 1.0,
+    dispatch: str = "async",
+    engine: Optional[InferenceEngine] = None,
 ) -> Tuple[DeepRT, InferenceEngine, ProfileTable]:
-    engine = InferenceEngine(configs)
+    """Build the live wall-clock DeepRT over a compiled engine.
+
+    ``dispatch="async"`` (default): zero-stall pipeline — profiled WCET
+    estimates drive ``busy_until``, the AsyncDevice measures reality.
+    ``dispatch="sync"``: legacy blocking execution, A/B baseline only.
+    """
+    if engine is None:
+        engine = InferenceEngine(configs)
     cats = list(categories)
     kinds = {(mid, shape): kind for mid, shape, kind in cats}
     table = profile_engine(engine, cats, batch_sizes)
+    engine.reset_stats()  # stats cover served traffic, not profiling
+    loop = WallClock()
 
-    def run_job(job, wcet):
-        kind = kinds.get((job.category.model_id, job.shape_key), "prefill")
-        return engine.execute(
-            job.category.model_id, job.shape_key, job.batch_size, kind
+    def kind_of(job) -> str:
+        return kinds.get((job.category.model_id, job.shape_key), "prefill")
+
+    def job_bytes(job) -> float:
+        return engine.job_bytes(
+            job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
         )
 
-    sched = DeepRT(
-        table,
-        loop=WallClock(),
-        execution=ExecutionModel(actual_fn=run_job),
-        utilization_bound=utilization_bound,
-    )
+    if dispatch == "async":
+        device = AsyncDevice(
+            loop,
+            dispatch_fn=lambda job: engine.dispatch(
+                job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
+            ),
+        )
+        # exec_time under async dispatch is the busy-until ESTIMATE (the
+        # profiled WCET); the device reports the real completion instant.
+        sched = DeepRT(
+            table,
+            loop=loop,
+            execution=ExecutionModel(actual_fn=lambda job, wcet: wcet),
+            utilization_bound=utilization_bound,
+            device=device,
+        )
+    elif dispatch == "sync":
+        def run_job(job, wcet):
+            return engine.execute(
+                job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
+            )
+
+        sched = DeepRT(
+            table,
+            loop=loop,
+            execution=ExecutionModel(actual_fn=run_job),
+            utilization_bound=utilization_bound,
+            device=_BlockingDevice(loop),
+        )
+    else:
+        raise ValueError(f"dispatch must be 'async' or 'sync', got {dispatch!r}")
+    sched.worker.job_bytes_fn = job_bytes
     return sched, engine, table

@@ -2,47 +2,102 @@
 
 A DeepRT *category* is (model_id, shape bucket). The engine pre-compiles
 one XLA program per (model, kind, seq bucket, batch bucket) — batch
-sizes are padded up to the next power of two so the compile count stays
-logarithmic while the profiler table (which is keyed on true batch size,
-rounded up identically) stays consistent with what actually runs.
+sizes are padded up to the next power of two via the SHARED
+``repro.core.bucketing.bucket`` (the same rounding the profiler grid and
+the admission WCET lookup use), so the compile count stays logarithmic
+while the table stays consistent with what actually runs.
+
+Hot-path design (the zero-stall serving pipeline):
+
+- ``dispatch`` launches a step WITHOUT blocking: JAX async dispatch
+  returns futures, the host thread goes straight back to scheduling, and
+  the ``AsyncDevice`` waiter observes completion via ``StepHandle.wait``.
+  ``execute`` (= dispatch + wait) remains the synchronous path for the
+  offline profiler and the before/after benchmark A/B.
+- KV caches are DONATED (``jax.jit(..., donate_argnums=...)``): each
+  decode step updates the cache in place instead of allocating a full
+  copy — per-step allocation cost drops from O(cache) to O(batch).
+- Input staging arrays are preallocated per (kind, model, seq, bucket):
+  no per-call ``jnp.zeros`` allocation or host->device transfer on the
+  hot path (see ``_stage`` for the double-buffering plan once real
+  token ingestion writes into them).
+- Decode is padding-free in effect: a true batch of k runs in a
+  ``bucket(k)``-slot buffer, but pad rows carry cursor 0 so the
+  position/validity masking (the same bitmap path the decode Pallas
+  kernel uses) reduces their attended KV slots to one — pad rows cost
+  ~nothing instead of a full-seq attention row. ``stats`` exposes the
+  measured real-vs-total slot accounting.
 
 Two step kinds per the shape pool:
 - ``prefill``: full forward over (b, seq) tokens -> last-token logits
 - ``decode`` : one token against a seq-length KV cache
-
-``execute`` runs a job instance synchronously (the device is sequential —
-exactly DeepRT's execution model) and returns measured wall seconds, so
-the EDF worker's exec_time_fn plugs straight in (batcher_bridge.py).
 """
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.bucketing import bucket
 from repro.models import model_for
+from repro.models.kvcache import cache_nbytes
 
 
-def _bucket(n: int) -> int:
-    b = 1
-    while b < n:
-        b *= 2
-    return b
+@dataclass
+class StepHandle:
+    """One in-flight dispatched step (outputs may still be computing)."""
+
+    outputs: Any  # jax array(s): prefill -> next tokens; decode -> logits
+    mid: str
+    kind: str
+    true_batch: int
+    bucket_batch: int
+
+    def wait(self) -> Any:
+        """Block until the device finishes; returns the ready outputs."""
+        jax.block_until_ready(self.outputs)
+        return self.outputs
 
 
 class InferenceEngine:
-    def __init__(self, configs: Dict[str, ModelConfig], seed: int = 0):
+    def __init__(
+        self,
+        configs: Dict[str, ModelConfig],
+        seed: int = 0,
+        donate_cache: bool = True,
+        masked_decode: bool = True,
+    ):
+        """``donate_cache=False`` and ``masked_decode=False`` recreate the
+        old copying / blind-padding behavior — kept ONLY so the hot-path
+        benchmark and the equivalence tests can A/B against them."""
         self.configs = dict(configs)
         self.models = {mid: model_for(cfg) for mid, cfg in configs.items()}
+        self.donate_cache = donate_cache
+        self.masked_decode = masked_decode
         key = jax.random.PRNGKey(seed)
         self.params = {}
         for i, (mid, model) in enumerate(self.models.items()):
             self.params[mid] = model.init(jax.random.fold_in(key, i))
         self._compiled: Dict[Tuple, Any] = {}
         self._caches: Dict[Tuple, Any] = {}
+        self._staging: Dict[Tuple, Dict[str, jax.Array]] = {}
+        self._cursors: Dict[Tuple, jax.Array] = {}
+        # Measured padding accounting (decode): attended KV slots.
+        self.stats: Dict[str, int] = {}
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        """Zero the padding/dispatch counters. build_live_scheduler calls
+        this after the offline profiling pass so ``stats`` reflects only
+        served traffic, not warmup/profiling dispatches."""
+        self.stats.update(
+            real_rows=0, bucket_rows=0, real_slots=0, total_slots=0,
+            dispatches=0,
+        )
 
     # ----- compiled step factories ----------------------------------------
     def _prefill_fn(self, mid: str, seq: int, batch: int):
@@ -58,14 +113,15 @@ class InferenceEngine:
         return self._compiled[key]
 
     def _decode_fn(self, mid: str, seq: int, batch: int):
-        key = ("decode", mid, seq, batch)
+        key = ("decode", mid, seq, batch, self.donate_cache)
         if key not in self._compiled:
             model = self.models[mid]
-            self._compiled[key] = jax.jit(
-                lambda params, cache, tok, cur: model.decode_step(
-                    params, cache, tok, cur
-                )
-            )
+
+            def run(params, cache, tok, cur):
+                return model.decode_step(params, cache, tok, cur)
+
+            donate = (1,) if self.donate_cache else ()
+            self._compiled[key] = jax.jit(run, donate_argnums=donate)
         return self._compiled[key]
 
     def _cache_for(self, mid: str, seq: int, batch: int):
@@ -74,33 +130,109 @@ class InferenceEngine:
             self._caches[key] = self.models[mid].init_cache(batch, seq)
         return self._caches[key]
 
+    # ----- preallocated input staging -------------------------------------
+    def _stage(self, kind: str, mid: str, seq: int, batch: int) -> Dict[str, jax.Array]:
+        """Preallocated input arrays per (kind, model, seq, bucket): no
+        fresh ``jnp.zeros`` allocation or host->device transfer per call.
+        Inputs are synthetic (zero tokens) for now, so one buffer per key
+        suffices; once real token ingestion lands, writes must
+        double-buffer (fill buffer B while the in-flight job reads A) —
+        reintroduce the flip at that point, not before."""
+        key = (kind, mid, seq, batch)
+        buf = self._staging.get(key)
+        if buf is None:
+            if kind == "prefill":
+                buf = {"tokens": jnp.zeros((batch, seq), jnp.int32)}
+            else:
+                buf = {"tok": jnp.zeros((batch,), jnp.int32)}
+            self._staging[key] = buf
+        return buf
+
+    def _cursor_for(self, seq: int, batch: int, true_batch: int) -> jax.Array:
+        """Per-row cursors: real rows sit at position seq-1; pad rows (the
+        validity-bitmap path) sit at 0, so masking shrinks their attended
+        KV range to a single slot instead of a full seq-length row."""
+        if not self.masked_decode:
+            true_batch = batch  # blind padding: every row does full work
+        key = (seq, batch, true_batch)
+        if key not in self._cursors:
+            cur = jnp.concatenate(
+                [
+                    jnp.full((true_batch,), seq - 1, jnp.int32),
+                    jnp.zeros((batch - true_batch,), jnp.int32),
+                ]
+            )
+            self._cursors[key] = cur
+        return self._cursors[key]
+
     # ----- execution ---------------------------------------------------------
     def warmup(self, mid: str, shape_key: Tuple[int, ...], batch_sizes,
                kind: str = "prefill") -> None:
         for b in batch_sizes:
             self.execute(mid, shape_key, b, kind)
 
+    def dispatch(
+        self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
+        kind: str = "prefill",
+    ) -> StepHandle:
+        """Launch one batched job WITHOUT waiting for the device.
+
+        Returns immediately after JAX async dispatch; the returned
+        handle's ``wait()`` blocks until the result is ready (the
+        AsyncDevice calls it from the waiter thread). First call per
+        (kind, model, seq, bucket) compiles — warm up via the profiler.
+        shape_key = (seq_len,) for LM categories.
+        """
+        seq = shape_key[0]
+        b = bucket(batch_size)
+        self.stats["dispatches"] += 1
+        self.stats["real_rows"] += batch_size
+        self.stats["bucket_rows"] += b
+        if kind == "prefill":
+            fn = self._prefill_fn(mid, seq, b)
+            stage = self._stage("prefill", mid, seq, b)
+            out = fn(self.params[mid], stage["tokens"])
+            return StepHandle(out, mid, kind, batch_size, b)
+        fn = self._decode_fn(mid, seq, b)
+        cache = self._cache_for(mid, seq, b)
+        stage = self._stage("decode", mid, seq, b)
+        cur = self._cursor_for(seq, b, batch_size)
+        k = batch_size if self.masked_decode else b
+        self.stats["real_slots"] += batch_size * seq
+        self.stats["total_slots"] += k * seq + (b - k)
+        logits, new_cache = fn(self.params[mid], cache, stage["tok"], cur)
+        # Replace (never reuse) the stored cache: with donation the old
+        # buffers were consumed by the step and updated in place.
+        self._caches[(mid, seq, b)] = new_cache
+        return StepHandle(logits, mid, kind, batch_size, b)
+
     def execute(
         self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
         kind: str = "prefill",
     ) -> float:
-        """Run one batched job synchronously; returns wall seconds.
-        shape_key = (seq_len,) for LM categories."""
-        seq = shape_key[0]
-        b = _bucket(batch_size)
-        cfg = self.configs[mid]
-        tokens = jnp.zeros((b, seq), jnp.int32)
-        if kind == "prefill":
-            fn = self._prefill_fn(mid, seq, b)
-            t0 = time.perf_counter()
-            fn(self.params[mid], tokens).block_until_ready()
-            return time.perf_counter() - t0
-        fn = self._decode_fn(mid, seq, b)
-        cache = self._cache_for(mid, seq, b)
-        tok = jnp.zeros((b,), jnp.int32)
-        cur = jnp.full((b,), seq - 1, jnp.int32)
+        """Run one batched job synchronously; returns wall seconds. The
+        offline profiler path (and the benchmark's blocking A/B arm)."""
         t0 = time.perf_counter()
-        logits, new_cache = fn(self.params[mid], cache, tok, cur)
-        logits.block_until_ready()
-        self._caches[(mid, seq, b)] = new_cache
+        self.dispatch(mid, shape_key, batch_size, kind).wait()
         return time.perf_counter() - t0
+
+    # ----- accounting -----------------------------------------------------
+    def job_bytes(
+        self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
+        kind: str = "prefill",
+    ) -> float:
+        """Resident bytes one job pins on-device (staging + KV cache)."""
+        seq = shape_key[0]
+        b = bucket(batch_size)
+        n = 4 * b * (seq if kind == "prefill" else 1)  # int32 staging
+        if kind == "decode":
+            n += cache_nbytes(self._cache_for(mid, seq, b))
+        return float(n)
+
+    @property
+    def padding_waste(self) -> float:
+        """Measured fraction of attended decode KV slots spent on pad
+        rows (0.0 when every batch exactly fills its bucket)."""
+        if self.stats["total_slots"] == 0:
+            return 0.0
+        return 1.0 - self.stats["real_slots"] / self.stats["total_slots"]

@@ -1,0 +1,256 @@
+"""Zero-stall serving hot path: async dispatch, donation, masked batches.
+
+Covers the acceptance bars of the hot-path PR:
+- completion ordering under the virtual-clock SequentialDevice is
+  deterministic (the async contract changes nothing in simulation);
+- a masked batch of k < bucket is bit-identical to the unpadded
+  reference on the real rows;
+- donated-cache decode equals the copying path;
+- the shared bucket utility and the bucket-aware WCET lookup agree;
+- WallClock fires events at their exact times (no 50 ms quantization)
+  and supports cross-thread post/hold/release.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Category,
+    DeepRT,
+    EventLoop,
+    ExecutionModel,
+    ProfileTable,
+    Request,
+    WallClock,
+)
+from repro.core.bucketing import bucket, bucket_sizes, padding_fraction
+
+
+class TestBucketing:
+    def test_bucket_values(self):
+        assert [bucket(n) for n in [0, 1, 2, 3, 4, 5, 8, 9, 17]] == [
+            0, 1, 2, 4, 4, 8, 8, 16, 32,
+        ]
+
+    def test_bucket_negative_raises(self):
+        with pytest.raises(ValueError):
+            bucket(-1)
+
+    def test_bucket_sizes_grid(self):
+        assert bucket_sizes(8) == [1, 2, 4, 8]
+        assert bucket_sizes(5) == [1, 2, 4, 8]
+        assert bucket_sizes(1) == [1]
+        assert bucket_sizes(0) == []
+
+    def test_padding_fraction(self):
+        assert padding_fraction(5) == pytest.approx(3 / 8)
+        assert padding_fraction(8) == 0.0
+
+    def test_wcet_charges_engine_bucket(self):
+        """The admission lookup rounds through the SAME bucket the engine
+        executes: batch 5 with a pow2 grid is charged the batch-8 entry,
+        and beyond-table extrapolation happens at the bucket."""
+        t = ProfileTable()
+        for b in [1, 2, 4, 8]:
+            t.record("m", (16,), b, 0.001 * b + 0.004)
+        assert t.wcet("m", (16,), 5) == t.wcet("m", (16,), 8)
+        assert t.wcet("m", (16,), 9) == t.wcet("m", (16,), 16)
+
+    def test_engine_and_table_rounding_agree(self):
+        from repro.serving.engine import InferenceEngine  # noqa: F401
+        import repro.serving.engine as eng
+
+        # The engine imports THE shared bucket — no local duplicate.
+        assert eng.bucket is bucket
+        assert not hasattr(eng, "_bucket")
+
+
+class TestDeterministicSimulation:
+    """The async-capable worker must leave virtual-time runs bit-stable."""
+
+    def _run_once(self):
+        table = ProfileTable()
+        for b in [1, 2, 4, 8, 16]:
+            table.record("m", (1,), b, 0.004 + 0.0015 * b)
+            table.record("n", (1,), b, 0.006 + 0.0020 * b)
+        sched = DeepRT(
+            table,
+            loop=EventLoop(),
+            execution=ExecutionModel(actual_fn=lambda job, wcet: 0.95 * wcet),
+        )
+        for i, (mid, period, dl) in enumerate(
+            [("m", 0.05, 0.2), ("n", 0.07, 0.25), ("m", 0.11, 0.4)]
+        ):
+            req = Request(
+                category=Category(mid, (1,)),
+                period=period,
+                relative_deadline=dl,
+                n_frames=20,
+                start_time=0.013 * i,
+            )
+            sched.submit_request(req)
+        m = sched.run()
+        order = [
+            (j.category.model_id, j.start_time, j.completion_time, j.batch_size)
+            for j in sched.worker.completed_jobs
+        ]
+        return order, m
+
+    def test_completion_ordering_deterministic(self):
+        o1, m1 = self._run_once()
+        o2, m2 = self._run_once()
+        assert o1 == o2
+        # request_id is a process-global counter; compare records by
+        # (frame index, timing), not by id.
+        rec1 = sorted((fi, v) for (_rid, fi), v in m1.frame_records.items())
+        rec2 = sorted((fi, v) for (_rid, fi), v in m2.frame_records.items())
+        assert rec1 == rec2
+        assert m1.completed_frames == 60
+
+    def test_padding_metrics_recorded(self):
+        _, m = self._run_once()
+        assert m.bucket_rows >= m.real_rows > 0
+        assert 0.0 <= m.padding_waste < 1.0
+        assert len(m.dispatch_overheads) == m.job_count
+
+
+class TestMaskedBatchDecode:
+    def test_masked_rows_bit_identical_to_unpadded(self):
+        """k real rows in a bucket(k)-slot buffer == the k-row reference,
+        bit for bit (row-parallel model; pad rows parked at cursor 0)."""
+        from repro.configs.registry import tiny
+        from repro.models import model_for
+
+        cfg = tiny("granite-3-2b")
+        model = model_for(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        seq, k, b = 16, 3, bucket(3)
+        tok_b = jnp.arange(b, dtype=jnp.int32) % 7
+        cur_b = jnp.concatenate(
+            [jnp.full((k,), seq - 1, jnp.int32), jnp.zeros((b - k,), jnp.int32)]
+        )
+        logits_b, _ = jax.jit(model.decode_step)(
+            params, model.init_cache(b, seq), tok_b, cur_b
+        )
+        logits_k, _ = jax.jit(model.decode_step)(
+            params, model.init_cache(k, seq), tok_b[:k],
+            jnp.full((k,), seq - 1, jnp.int32),
+        )
+        assert bool(jnp.all(logits_b[:k] == logits_k))
+
+    def test_donated_cache_matches_copying(self):
+        from repro.configs.registry import tiny
+        from repro.serving.engine import InferenceEngine
+
+        outs = {}
+        for donate in (False, True):
+            engine = InferenceEngine(
+                {"granite-3-2b": tiny("granite-3-2b")}, donate_cache=donate
+            )
+            hs = [
+                engine.dispatch("granite-3-2b", (16,), 3, kind="decode")
+                for _ in range(3)
+            ]
+            outs[donate] = [h.wait() for h in hs]
+        for a, c in zip(outs[True], outs[False]):
+            assert bool(jnp.all(a == c))
+
+    def test_engine_padding_accounting(self):
+        from repro.configs.registry import tiny
+        from repro.serving.engine import InferenceEngine
+
+        masked = InferenceEngine({"granite-3-2b": tiny("granite-3-2b")})
+        blind = InferenceEngine(
+            {"granite-3-2b": tiny("granite-3-2b")}, masked_decode=False
+        )
+        for e in (masked, blind):
+            e.execute("granite-3-2b", (16,), 5, kind="decode")
+        assert masked.padding_waste < blind.padding_waste
+        assert blind.padding_waste == pytest.approx(3 / 8)
+
+    def test_staging_buffers_are_reused(self):
+        from repro.configs.registry import tiny
+        from repro.serving.engine import InferenceEngine
+
+        engine = InferenceEngine({"granite-3-2b": tiny("granite-3-2b")})
+        for _ in range(4):
+            engine.execute("granite-3-2b", (16,), 2, kind="prefill")
+        # one (kind, mid, seq, bucket) entry; the same buffer every call.
+        assert len(engine._staging) == 1
+        (buf,) = engine._staging.values()
+        assert buf["tokens"].shape == (2, 16)
+
+
+class TestWallClock:
+    def test_exact_event_timing(self):
+        loop = WallClock()
+        fired = []
+        t0 = loop.now
+        loop.schedule(t0 + 0.08, lambda: fired.append(loop.now))
+        loop.run()
+        assert fired and abs(fired[0] - (t0 + 0.08)) < 0.02  # not 50ms bins
+
+    def test_cross_thread_post_wakes_loop(self):
+        loop = WallClock()
+        got = []
+        loop.hold()
+
+        def waiter():
+            time.sleep(0.05)
+            loop.post(lambda: got.append(loop.now))
+            loop.release()
+
+        threading.Thread(target=waiter, daemon=True).start()
+        t0 = time.perf_counter()
+        loop.run()  # heap empty; must stay alive on the hold, then drain
+        assert got and time.perf_counter() - t0 < 1.0
+
+
+class TestAsyncLiveServing:
+    def test_async_dispatch_serves_all_frames(self):
+        from repro.configs.registry import tiny
+        from repro.serving.async_device import AsyncDevice
+        from repro.serving.batcher_bridge import build_live_scheduler
+
+        configs = {"granite-3-2b": tiny("granite-3-2b")}
+        sched, engine, table = build_live_scheduler(
+            configs, [("granite-3-2b", (16,), "prefill")], batch_sizes=(1, 2, 4),
+        )
+        assert isinstance(sched.device, AsyncDevice)
+        w1 = table.wcet("granite-3-2b", (16,), 1)
+        req = Request(
+            category=Category("granite-3-2b", (16,)),
+            period=max(w1 * 4, 0.02),
+            relative_deadline=max(w1 * 24, 0.25),
+            n_frames=8,
+        )
+        assert sched.submit_request(req).admitted
+        m = sched.run()
+        assert m.completed_frames == 8
+        assert sched.device.idle
+        assert sched.device.last_error is None
+        # The whole point: host stall per job is far below one exec time.
+        assert m.mean_dispatch_overhead < max(w1, 0.005)
+
+    def test_failed_execution_raises_not_completes(self):
+        """A device-side failure must surface from run(), never be
+        recorded as a met deadline."""
+        from repro.serving.async_device import AsyncDevice
+
+        loop = WallClock()
+
+        class BoomHandle:
+            def wait(self):
+                raise ValueError("xla exploded")
+
+        device = AsyncDevice(loop, dispatch_fn=lambda job: BoomHandle())
+        completions = []
+        device.submit("job", 0.01, lambda j, t: completions.append(j))
+        with pytest.raises(RuntimeError, match="device execution failed"):
+            loop.run()
+        assert completions == []
+        assert isinstance(device.last_error, ValueError)
+        assert device.idle  # state released despite the failure
