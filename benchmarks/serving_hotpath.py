@@ -1,33 +1,56 @@
-"""Serving hot-path A/B: async zero-stall dispatch vs. the legacy
-blocking path, donated vs. copying KV caches, masked vs. blind padding.
+"""Serving hot-path benchmark: async zero-stall dispatch, slot-arena
+decode (one program, one resident KV arena per model), donated vs
+copying arenas, masked vs blind padding.
 
-Establishes the perf trajectory baseline for the live pipeline:
+Headline scenarios:
 
 - scheduler overhead per job (µs): host-side loop stall per dispatch
-  decision, measured by the EDF worker. Async dispatch submits and
-  returns; the blocking path stalls for the whole device execution.
-- decode steps/sec at batch {1, 2, 4, 8}: donated in-place caches +
-  preallocated staging vs. the old copy-every-step engine.
+  decision, measured by the EDF worker under async dispatch. The legacy
+  blocking path is DELETED (ROADMAP note); its recorded numbers from the
+  last run that still had it are replayed as the before-arm.
+- decode steps/sec at batch {1, 2, 4, 8}: the slot arena under donated
+  (in-place) vs copying cache semantics. On CPU jax donation is honored
+  (buffers alias) but charges a fixed per-dispatch bookkeeping cost that
+  swamps the avoided copy at these model sizes, so the engine gates its
+  default by backend — both arms are still measured here.
 - padding-waste fraction: measured attended-KV-slot waste with blind
-  power-of-two padding vs. the masked validity-bitmap path, over a
-  mixed-true-batch workload.
+  full-arena work vs the active-bitmap path (dead rows skip all KV
+  blocks), over a mixed-true-batch workload.
+- bucket transition: a batch-size sweep 1 -> max_slots -> 1 crossing
+  every former power-of-two bucket boundary. The arena arm must show
+  ZERO decode compiles after warm-up and no step-time spike at former
+  boundaries; the per-bucket arm (the pre-arena engine behavior,
+  reconstructed locally — the engine itself no longer has it) shows the
+  lazy-compile stall + cold cache per new bucket that used to blow
+  deadlines.
 
 Writes ``BENCH_serving_hotpath.json`` at the repo root (plus the usual
 CSV under benchmarks/results/) so successive PRs can track the numbers.
 
-    PYTHONPATH=src python -m benchmarks.serving_hotpath
+    PYTHONPATH=src python -m benchmarks.serving_hotpath [--smoke]
+
+``--smoke`` (CI): tiny shapes, few steps, no root-JSON rewrite — it
+exists to catch bench bit-rot (import errors, NaN/zero throughput)
+before a perf PR needs the numbers, not to produce stable timings.
 """
 from __future__ import annotations
 
-import copy
+import argparse
 import json
+import math
 import os
+import statistics
 import time
 from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
 
 from benchmarks.common import write_csv
 from repro.configs.registry import tiny
 from repro.core import Category, Request
+from repro.core.bucketing import bucket
+from repro.models import model_for
 from repro.serving.batcher_bridge import build_live_scheduler
 from repro.serving.engine import InferenceEngine
 
@@ -35,29 +58,35 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MID = "granite-3-2b"
 SEQ = 32
+MAX_SLOTS = 8
 DECODE_BATCHES = (1, 2, 4, 8)
 MIXED_TRUE_BATCHES = (1, 3, 5, 6, 7, 8)  # non-pow2-heavy: padding stress
 
+# Recorded output of the deleted blocking-dispatch path (last measured in
+# the PR-1 BENCH_serving_hotpath.json on this container, commit 7faae7e).
+# Replayed as the before-arm per the ROADMAP note — the dead code is not
+# kept alive just to re-time it.
+RECORDED_SYNC = {"overhead_us_per_job": 1983.1, "miss_rate": 0.0}
 
-def _scheduler_overhead(dispatch: str, n_frames: int = 12) -> Dict[str, float]:
-    """Run the same admitted workload through the live scheduler in the
-    given dispatch mode; report host-stall per job."""
+
+def _scheduler_overhead(n_frames: int = 12, seq: int = SEQ) -> Dict[str, float]:
+    """Run an admitted workload through the live async scheduler; report
+    host-stall per dispatch decision."""
     configs = {MID: tiny(MID)}
     sched, engine, table = build_live_scheduler(
-        configs, [(MID, (SEQ,), "prefill")], batch_sizes=(1, 2, 4),
-        dispatch=dispatch,
+        configs, [(MID, (seq,), "prefill")], batch_sizes=(1, 2, 4),
     )
-    w1 = table.wcet(MID, (SEQ,), 1)
+    w1 = table.wcet(MID, (seq,), 1)
     req = Request(
-        category=Category(MID, (SEQ,)),
+        category=Category(MID, (seq,)),
         period=max(w1 * 4, 0.02),
         relative_deadline=max(w1 * 24, 0.25),
         n_frames=n_frames,
     )
     res = sched.submit_request(req)
-    assert res.admitted, f"{dispatch}: probe request rejected"
+    assert res.admitted, "async: probe request rejected"
     m = sched.run()
-    assert m.completed_frames == n_frames, (dispatch, m.completed_frames)
+    assert m.completed_frames == n_frames, ("async", m.completed_frames)
     return {
         "overhead_us_per_job": m.mean_dispatch_overhead * 1e6,
         "jobs": m.job_count,
@@ -65,89 +94,264 @@ def _scheduler_overhead(dispatch: str, n_frames: int = 12) -> Dict[str, float]:
     }
 
 
-def _decode_rate(donate: bool, steps: int = 30) -> Dict[int, float]:
-    """Steady-state decode steps/sec per batch bucket."""
-    engine = InferenceEngine({MID: tiny(MID)}, donate_cache=donate)
+def _decode_rate(
+    donate: bool, steps: int = 30, seq: int = SEQ, max_slots: int = MAX_SLOTS,
+    batches=DECODE_BATCHES,
+) -> Dict[int, float]:
+    """Steady-state decode steps/sec per batch size on the slot arena."""
+    engine = InferenceEngine(
+        {MID: tiny(MID)}, donate_cache=donate, max_slots=max_slots
+    )
     rates: Dict[int, float] = {}
-    for b in DECODE_BATCHES:
-        engine.execute(MID, (SEQ,), b, kind="decode")  # compile + warm
-        engine.execute(MID, (SEQ,), b, kind="decode")
+    for b in batches:
+        engine.execute(MID, (seq,), b, kind="decode")  # compile + warm
+        engine.execute(MID, (seq,), b, kind="decode")
         t0 = time.perf_counter()
         for _ in range(steps):
-            h = engine.dispatch(MID, (SEQ,), b, kind="decode")
+            h = engine.dispatch(MID, (seq,), b, kind="decode")
         h.wait()  # pipelined: block once at the end
         rates[b] = steps / (time.perf_counter() - t0)
     return rates
 
 
-def _padding_waste(masked: bool) -> float:
+def _padding_waste(masked: bool, seq: int = SEQ, max_slots: int = MAX_SLOTS,
+                   batches=MIXED_TRUE_BATCHES) -> float:
     """Measured attended-slot waste over a mixed true-batch decode mix."""
-    engine = InferenceEngine({MID: tiny(MID)}, masked_decode=masked)
-    for b in MIXED_TRUE_BATCHES:
-        engine.execute(MID, (SEQ,), b, kind="decode")
+    engine = InferenceEngine(
+        {MID: tiny(MID)}, masked_decode=masked, max_slots=max_slots
+    )
+    for b in batches:
+        if b <= max_slots:
+            engine.execute(MID, (seq,), b, kind="decode")
     return engine.padding_waste
 
 
-def main() -> List[str]:
-    sync = _scheduler_overhead("sync")
-    asyn = _scheduler_overhead("async")
-    rate_copy = _decode_rate(donate=False)
-    rate_donate = _decode_rate(donate=True)
-    waste_blind = _padding_waste(masked=False)
-    waste_masked = _padding_waste(masked=True)
+class _LegacyPerBucketDecode:
+    """The pre-arena decode path, reconstructed for the A/B only.
+
+    One lazily-compiled program AND one separate KV cache per batch
+    bucket — exactly what the engine did before the slot arena (and what
+    the arena deleted). A job crossing a bucket boundary hits a cold
+    program (compile stall on the serving thread) and a cold cache.
+    Token and cursor staging are preallocated per (bucket, true batch),
+    matching the old engine's ``_stage``/``_cursor_for`` buffers, so the
+    steady-state comparison is fair — the arms differ only in program/
+    cache granularity.
+    """
+
+    def __init__(self, cfg, seq: int):
+        self.model = model_for(cfg)
+        self.params = self.model.init(jax.random.PRNGKey(0))
+        self.seq = seq
+        self._compiled: Dict[int, object] = {}
+        self._caches: Dict[int, object] = {}
+        self._tok: Dict[int, object] = {}
+        self._cur: Dict[tuple, object] = {}
+        self.compiles = 0
+
+    def step(self, k: int) -> None:
+        b = bucket(k)
+        if b not in self._compiled:
+            self.compiles += 1
+            model = self.model
+
+            def run(params, cache, tok, cur):
+                return model.decode_step(params, cache, tok, cur)
+
+            self._compiled[b] = jax.jit(run)
+        if b not in self._caches:
+            self._caches[b] = self.model.init_cache(b, self.seq)
+        if b not in self._tok:
+            self._tok[b] = jnp.zeros((b,), jnp.int32)
+        if (b, k) not in self._cur:
+            self._cur[(b, k)] = jnp.concatenate(
+                [
+                    jnp.full((k,), self.seq - 1, jnp.int32),
+                    jnp.zeros((b - k,), jnp.int32),
+                ]
+            )
+        logits, cache = self._compiled[b](
+            self.params, self._caches[b], self._tok[b], self._cur[(b, k)]
+        )
+        self._caches[b] = cache
+        jax.block_until_ready(logits)
+
+
+def _bucket_transition(
+    seq: int = SEQ, max_slots: int = MAX_SLOTS
+) -> Dict[str, object]:
+    """Batch-size sweep crossing every former bucket boundary, per-step
+    latency measured synchronously. Both arms warm up ONCE at batch 1."""
+    up = list(range(1, max_slots + 1))
+    sweep = up + up[-2::-1] + up[1:]  # 1..max..1..max: re-cross boundaries
+
+    # --- slot arena arm ---------------------------------------------------
+    engine = InferenceEngine({MID: tiny(MID)}, max_slots=max_slots)
+    engine.execute(MID, (seq,), 1, kind="decode")  # the ONE compile
+    engine.reset_stats()  # compiles counted from here = after warm-up
+    arena_ms = [
+        engine.execute(MID, (seq,), k, kind="decode") * 1e3 for k in sweep
+    ]
+
+    # --- legacy per-bucket arm -------------------------------------------
+    legacy = _LegacyPerBucketDecode(tiny(MID), seq)
+    legacy.step(1)  # warm bucket 1
+    warm_compiles = legacy.compiles
+    legacy_ms = []
+    for k in sweep:
+        t0 = time.perf_counter()
+        legacy.step(k)
+        legacy_ms.append((time.perf_counter() - t0) * 1e3)
+
+    def summarize(ms: List[float]) -> Dict[str, float]:
+        med = statistics.median(ms)
+        return {
+            "median_ms": med,
+            "max_ms": max(ms),
+            "spike_x": max(ms) / med if med > 0 else float("inf"),
+        }
+
+    return {
+        "sweep": sweep,
+        "arena": dict(
+            summarize(arena_ms),
+            compiles_after_warmup=engine.stats["decode_compiles"],
+        ),
+        "per_bucket": dict(
+            summarize(legacy_ms),
+            compiles_after_warmup=legacy.compiles - warm_compiles,
+        ),
+    }
+
+
+def _check_finite(tag: str, value: float) -> None:
+    if not math.isfinite(value) or value <= 0:
+        raise AssertionError(f"{tag} is NaN/zero/negative: {value}")
+
+
+def main(smoke: bool = False) -> List[str]:
+    if smoke:
+        seq, max_slots, steps = 16, 4, 4
+        batches = (1, 2, 4)
+    else:
+        seq, max_slots, steps = SEQ, MAX_SLOTS, 30
+        batches = DECODE_BATCHES
+
+    asyn = _scheduler_overhead(n_frames=6 if smoke else 12, seq=seq)
+    rate_copy = _decode_rate(False, steps, seq, max_slots, batches)
+    rate_donate = _decode_rate(True, steps, seq, max_slots, batches)
+    waste_blind = _padding_waste(False, seq, max_slots)
+    waste_masked = _padding_waste(True, seq, max_slots)
+    transition = _bucket_transition(seq, max_slots)
 
     result = {
         "scheduler_overhead_per_job_us": {
-            "sync_blocking": sync["overhead_us_per_job"],
+            "sync_blocking_recorded": RECORDED_SYNC["overhead_us_per_job"],
             "async_dispatch": asyn["overhead_us_per_job"],
             "improvement_x": (
-                sync["overhead_us_per_job"] / max(asyn["overhead_us_per_job"], 1e-9)
+                RECORDED_SYNC["overhead_us_per_job"]
+                / max(asyn["overhead_us_per_job"], 1e-9)
             ),
         },
         "decode_steps_per_sec": {
             str(b): {"copy": rate_copy[b], "donated": rate_donate[b]}
-            for b in DECODE_BATCHES
+            for b in batches
+        },
+        "donate_cache_default": {
+            "backend": jax.default_backend(),
+            "donate": jax.default_backend() != "cpu",
+            "rationale": (
+                "CPU XLA honors donation (buffers alias across steps) but "
+                "adds a fixed per-dispatch donation bookkeeping cost that "
+                "exceeds the avoided O(cache) copy at these model sizes — "
+                "measured ~50us+ per jitted call on this container; on "
+                "tpu/gpu the copy dominates and donation is the default."
+            ),
         },
         "padding_waste_fraction": {
-            "blind_pow2": waste_blind,
+            "blind_full_arena": waste_blind,
             "masked_bitmap": waste_masked,
         },
-        "miss_rate": {"sync": sync["miss_rate"], "async": asyn["miss_rate"]},
+        "bucket_transition": transition,
+        "miss_rate": {
+            "sync_recorded": RECORDED_SYNC["miss_rate"],
+            "async": asyn["miss_rate"],
+        },
     }
-    with open(os.path.join(REPO_ROOT, "BENCH_serving_hotpath.json"), "w") as f:
-        json.dump(result, f, indent=1)
-    write_csv(
-        "serving_hotpath",
-        ["metric", "before", "after"],
-        [
-            ["scheduler_overhead_us", sync["overhead_us_per_job"],
-             asyn["overhead_us_per_job"]],
-            ["padding_waste", waste_blind, waste_masked],
-        ]
-        + [
-            [f"decode_steps_per_sec_b{b}", rate_copy[b], rate_donate[b]]
-            for b in DECODE_BATCHES
-        ],
-    )
 
-    # The acceptance bar: strictly improved on both headline axes.
-    assert asyn["overhead_us_per_job"] < sync["overhead_us_per_job"], result
-    assert waste_masked < waste_blind, result
+    # Bit-rot guards (what --smoke exists for): every throughput finite
+    # and positive, padding accounting sane, arena invariants hold.
+    for b in batches:
+        _check_finite(f"decode copy b={b}", rate_copy[b])
+        _check_finite(f"decode donated b={b}", rate_donate[b])
+    _check_finite("async overhead", asyn["overhead_us_per_job"])
+    assert waste_masked < waste_blind, result["padding_waste_fraction"]
+    # The acceptance bar of the slot arena: zero decode recompiles after
+    # warm-up across the full sweep (old path: one per bucket), and no
+    # compile-sized step spike at former bucket boundaries.
+    arena_t = transition["arena"]
+    legacy_t = transition["per_bucket"]
+    assert arena_t["compiles_after_warmup"] == 0, transition
+    assert legacy_t["compiles_after_warmup"] >= 1, transition
+    assert arena_t["spike_x"] < legacy_t["spike_x"], transition
+    if not smoke:
+        # Wall-clock comparison against the recorded sync numbers is a
+        # same-machine claim — skip it in CI smoke, where a slow runner
+        # would fail on timing rather than breakage.
+        assert (
+            asyn["overhead_us_per_job"] < RECORDED_SYNC["overhead_us_per_job"]
+        ), result
+
+    if not smoke:
+        with open(os.path.join(REPO_ROOT, "BENCH_serving_hotpath.json"), "w") as f:
+            json.dump(result, f, indent=1)
+        write_csv(
+            "serving_hotpath",
+            ["metric", "before", "after"],
+            [
+                ["scheduler_overhead_us", RECORDED_SYNC["overhead_us_per_job"],
+                 asyn["overhead_us_per_job"]],
+                ["padding_waste", waste_blind, waste_masked],
+                ["decode_compiles_after_warmup",
+                 legacy_t["compiles_after_warmup"],
+                 arena_t["compiles_after_warmup"]],
+                ["bucket_transition_spike_x", legacy_t["spike_x"],
+                 arena_t["spike_x"]],
+            ]
+            + [
+                [f"decode_steps_per_sec_b{b}", rate_copy[b], rate_donate[b]]
+                for b in batches
+            ],
+        )
 
     lines = [
-        f"serving_hotpath,scheduler_overhead_us_sync,{sync['overhead_us_per_job']:.1f}",
+        f"serving_hotpath,scheduler_overhead_us_sync_recorded,"
+        f"{RECORDED_SYNC['overhead_us_per_job']:.1f}",
         f"serving_hotpath,scheduler_overhead_us_async,{asyn['overhead_us_per_job']:.1f}",
         f"serving_hotpath,padding_waste_blind,{waste_blind:.4f}",
         f"serving_hotpath,padding_waste_masked,{waste_masked:.4f}",
+        f"serving_hotpath,decode_compiles_after_warmup_arena,"
+        f"{arena_t['compiles_after_warmup']}",
+        f"serving_hotpath,decode_compiles_after_warmup_per_bucket,"
+        f"{legacy_t['compiles_after_warmup']}",
+        f"serving_hotpath,bucket_transition_spike_arena,{arena_t['spike_x']:.2f}x",
+        f"serving_hotpath,bucket_transition_spike_per_bucket,"
+        f"{legacy_t['spike_x']:.2f}x",
     ]
-    for b in DECODE_BATCHES:
+    for b in batches:
         lines.append(
             f"serving_hotpath,decode_steps_per_sec_b{b},"
-            f"{rate_donate[b]:.1f} (copy {rate_copy[b]:.1f})"
+            f"copy {rate_copy[b]:.1f} / donated {rate_donate[b]:.1f}"
         )
     return lines
 
 
 if __name__ == "__main__":
-    for line in main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny shapes, few steps, no JSON rewrite (CI bit-rot guard)",
+    )
+    args = ap.parse_args()
+    for line in main(smoke=args.smoke):
         print(line)

@@ -1,12 +1,20 @@
-"""Shared batch-bucket rounding for the live engine and the imitator.
+"""Shared batch rounding for the live engine and the admission imitator.
 
-The serving engine compiles one XLA program per (model, kind, seq bucket,
-batch bucket), padding the true batch size up to the next power of two so
-the compile count stays logarithmic. The admission imitator charges each
-pseudo-job the WCET of the batch the engine will *actually run* — so both
-sides MUST round through this one function. Any drift (engine pads to 8,
-admission charges the batch-6 profile) silently breaks the Phase-2
-guarantee: the imitator's timeline would be faster than reality.
+Two regimes, one module, so the engine, the profiler grid, and the WCET
+lookup can never drift apart (drift silently breaks the Phase-2
+guarantee: the imitator's timeline would be faster than reality):
+
+- PREFILL stays power-of-two bucketed: the engine compiles one XLA
+  program per (model, seq bucket, batch bucket) via ``bucket``, so the
+  compile count is logarithmic and admission charges the batch the
+  engine actually pads to.
+- DECODE is served from a resident slot arena (``serving/engine.py``):
+  ONE compiled program per (model, seq) always executes ``max_slots``
+  rows, and the live batch size is data (an active-slot bitmap), not a
+  shape. Per-step decode cost is therefore FLAT in batch size, and the
+  WCET table stores a single flat entry per decode category
+  (``ProfileTable.record_flat``) instead of a per-bucket curve.
+  ``arena_slots`` is the one place the arena's row count is derived.
 
 Keep this module dependency-free; it is imported by the engine, the
 profiler, and the admission path.
@@ -41,6 +49,22 @@ def bucket_sizes(max_batch: int) -> List[int]:
     while out[-1] < bucket(max_batch):
         out.append(out[-1] * 2)
     return out
+
+
+def arena_slots(max_batch: int) -> int:
+    """Row count of a model's resident decode arena.
+
+    The arena is sized to the power-of-two bucket of the largest batch
+    admission can produce, so any admitted decode job fits without a
+    reshape or recompile. Sizing rule (documented in ROADMAP.md): the
+    Phase-1 utilization filter bounds the mean frames per DisBatcher
+    window at ``n_g = floor(sum_m W_g / p_m)``; size the arena to
+    ``arena_slots(n_g_max + 1)`` over the categories the engine serves
+    (the +1 absorbs the ceil of an in-flight partial period).
+    """
+    if max_batch <= 0:
+        raise ValueError(f"arena needs >= 1 slot, got max_batch={max_batch}")
+    return bucket(max_batch)
 
 
 def padding_fraction(true_batch: int, bucket_batch: int = 0) -> float:

@@ -68,8 +68,9 @@ class EDFWorker:
     exec_time_fn:
         job -> actual execution seconds. In simulation this samples the
         "real" execution time (possibly above the profiled WCET: an
-        overrun); in live serving it runs the compiled step and returns
-        the measured wall time.
+        overrun); in live serving it returns the profiled WCET, which
+        only seeds the async device's ``busy_until`` estimate (the
+        device itself reports the real completion instant).
     profiled_fn:
         job -> profiled WCET seconds (the lookup-table value).
     on_overrun:
@@ -103,6 +104,11 @@ class EDFWorker:
         self.request_idle_work = request_idle_work
         self.next_rt_release_fn = next_rt_release_fn
         self.job_bytes_fn: Optional[Callable[[JobInstance], float]] = None
+        # job -> batch-slot rows the execution backend actually ran.
+        # Default: the power-of-two prefill bucket. The live bridge
+        # overrides it for slot-arena decode, which always executes
+        # max_slots rows regardless of the job's batch size.
+        self.executed_rows_fn: Optional[Callable[[JobInstance], int]] = None
         self.completed_jobs: List[JobInstance] = []
         self._retry_scheduled = False  # a future-time retry is pending
         self._dispatch_pending = False  # a same-instant dispatch is pending
@@ -152,10 +158,10 @@ class EDFWorker:
         actual = self.exec_time_fn(job)
         jb = self.job_bytes_fn(job) if self.job_bytes_fn is not None else 0.0
         self.device.submit(job, actual, self._on_complete, job_bytes=jb)
-        # Host-side stall per dispatch: with an async device this is the
-        # microseconds spent picking + launching; with blocking execution
-        # it includes the whole device run — the A/B the hot-path
-        # benchmark reports.
+        # Host-side stall per dispatch: the microseconds spent picking +
+        # launching (async devices return immediately from submit) — the
+        # metric the hot-path benchmark tracks against the recorded
+        # legacy-blocking numbers.
         self.metrics.record_dispatch_overhead(_time.perf_counter() - t_host)
 
     def _pick_job(self) -> Optional[JobInstance]:
@@ -199,8 +205,15 @@ class EDFWorker:
     def _on_complete(self, job: JobInstance, now: float) -> None:
         job.completion_time = now
         self.completed_jobs.append(job)
-        # The engine executes the power-of-two bucket; charge its slots.
-        self.metrics.record_job(job.batch_size, bucket(job.batch_size))
+        # Charge the batch-slot rows that actually executed (prefill: the
+        # power-of-two bucket; arena decode: max_slots, via the bridge's
+        # executed_rows_fn override).
+        rows = (
+            self.executed_rows_fn(job)
+            if self.executed_rows_fn is not None
+            else bucket(job.batch_size)
+        )
+        self.metrics.record_job(job.batch_size, rows)
         for f in job.frames:
             f.completion_time = now
             self.metrics.record_frame(f)

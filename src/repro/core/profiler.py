@@ -50,9 +50,27 @@ def _percentile(sorted_xs: List[float], q: float) -> float:
 
 @dataclass
 class ProfileTable:
-    """WCET lookup: (model_id, shape_key) -> {batch_size: seconds}."""
+    """WCET lookup: (model_id, shape_key) -> {batch_size: seconds}.
+
+    Two entry kinds mirror the engine's two execution regimes:
+
+    - bucketed entries (``record``): per-batch-bucket curves, used by
+      prefill, whose cost grows with the padded batch;
+    - flat entries (``record_flat``): ONE worst-case time per category,
+      used by slot-arena decode — the engine executes the identical
+      ``max_slots``-row program for every live batch, so per-step cost is
+      independent of batch size and a curve would be fiction. Lookups up
+      to ``max_slots`` return the flat value; beyond it they return
+      ``inf`` — the engine REJECTS oversized decode dispatches (there is
+      no bigger program to lazily compile), so charging infinity makes
+      admission's Phase-1 filter and Phase-2 imitator reject any request
+      stream that could form such a batch instead of crashing the
+      serving loop at dispatch time.
+    """
 
     entries: Dict[TableKey, Dict[int, float]] = field(default_factory=dict)
+    # (model_id, shape_key) -> (max_slots, seconds): flat decode entries.
+    flat_entries: Dict[TableKey, Tuple[int, float]] = field(default_factory=dict)
     # Multiplies every lookup; the cluster layer uses it to model degraded
     # capacity (e.g. a straggling or partially failed slice).
     capacity_scale: float = 1.0
@@ -64,20 +82,37 @@ class ProfileTable:
             raise ValueError(f"wcet must be positive, got {wcet}")
         self.entries.setdefault((model_id, tuple(shape_key)), {})[batch_size] = wcet
 
+    def record_flat(
+        self, model_id: str, shape_key: ShapeKey, wcet: float, max_slots: int
+    ) -> None:
+        """Record a slot-arena decode category: one WCET (measured with
+        every arena row active — the worst case) for any batch size."""
+        if wcet <= 0:
+            raise ValueError(f"wcet must be positive, got {wcet}")
+        if max_slots <= 0:
+            raise ValueError(f"max_slots must be positive, got {max_slots}")
+        self.flat_entries[(model_id, tuple(shape_key))] = (max_slots, wcet)
+
     def has(self, model_id: str, shape_key: ShapeKey) -> bool:
-        return (model_id, tuple(shape_key)) in self.entries
+        key = (model_id, tuple(shape_key))
+        return key in self.entries or key in self.flat_entries
 
     def wcet(self, model_id: str, shape_key: ShapeKey, batch_size: int) -> float:
         """Conservative WCET for a batch of ``batch_size`` frames."""
         if batch_size <= 0:
             return 0.0
         key = (model_id, tuple(shape_key))
+        if key in self.flat_entries:
+            slots, t = self.flat_entries[key]
+            if batch_size > slots:
+                return math.inf  # unservable: arena has no such program
+            return t * self.capacity_scale
         try:
             table = self.entries[key]
         except KeyError:
             raise KeyError(
                 f"no profile for model={model_id} shape={shape_key}; "
-                f"profiled: {sorted(self.entries)}"
+                f"profiled: {sorted(self.entries) + sorted(self.flat_entries)}"
             ) from None
         if batch_size in table:
             return table[batch_size] * self.capacity_scale
@@ -118,6 +153,15 @@ class ProfileTable:
         if batch_size <= 0:
             return 0.0
         key = (model_id, tuple(shape_key))
+        if key in self.flat_entries:
+            # Flat decode cost: the optimistic estimate IS the flat time
+            # (running fewer active rows is not measurably cheaper), and
+            # beyond max_slots even Phase 1 must see infinity — "may
+            # over-admit" never extends to batches the engine rejects.
+            slots, t = self.flat_entries[key]
+            if batch_size > slots:
+                return math.inf
+            return t * self.capacity_scale
         table = self.entries[key]
         if batch_size in table:
             return table[batch_size] * self.capacity_scale
@@ -134,11 +178,18 @@ class ProfileTable:
         return (t1 + frac * (t2 - t1)) * self.capacity_scale
 
     def max_profiled_batch(self, model_id: str, shape_key: ShapeKey) -> int:
-        return max(self.entries[(model_id, tuple(shape_key))])
+        key = (model_id, tuple(shape_key))
+        if key in self.flat_entries:
+            return self.flat_entries[key][0]
+        return max(self.entries[key])
 
     def scaled(self, factor: float) -> "ProfileTable":
         """A view of this table with capacity degraded by ``factor`` >= 1."""
-        return ProfileTable(entries=self.entries, capacity_scale=self.capacity_scale * factor)
+        return ProfileTable(
+            entries=self.entries,
+            flat_entries=self.flat_entries,
+            capacity_scale=self.capacity_scale * factor,
+        )
 
     # -- persistence ---------------------------------------------------
     def to_json(self) -> str:
@@ -152,6 +203,17 @@ class ProfileTable:
                 }
                 for (model_id, shape_key), table in sorted(self.entries.items())
             ],
+            "flat_entries": [
+                {
+                    "model_id": model_id,
+                    "shape_key": list(shape_key),
+                    "max_slots": slots,
+                    "wcet": t,
+                }
+                for (model_id, shape_key), (slots, t) in sorted(
+                    self.flat_entries.items()
+                )
+            ],
         }
         return json.dumps(blob, indent=1)
 
@@ -162,6 +224,11 @@ class ProfileTable:
         for e in blob["entries"]:
             for b, t in e["table"].items():
                 table.record(e["model_id"], tuple(e["shape_key"]), int(b), float(t))
+        for e in blob.get("flat_entries", []):
+            table.record_flat(
+                e["model_id"], tuple(e["shape_key"]), float(e["wcet"]),
+                int(e["max_slots"]),
+            )
         return table
 
 

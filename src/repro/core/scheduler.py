@@ -41,7 +41,11 @@ class ExecutionModel:
     simulation: ``actual_fn(job, profiled_wcet) -> seconds``. Defaults to
     a deterministic 0.97x of profiled WCET (profiles are p99, reality sits
     just below). Benchmarks override this with samplers / overrun
-    injectors; live serving replaces the whole worker exec path.
+    injectors. Live serving passes the identity (the profiled WCET): the
+    value only seeds the AsyncDevice's ``busy_until`` estimate — the real
+    completion instant comes from the hardware, never from this model.
+    (The legacy blocking mode that ran the compiled step inside
+    ``actual_fn`` is deleted; there is no synchronous execution path.)
     """
 
     actual_fn: Callable[[JobInstance, float], float] = (
@@ -78,6 +82,11 @@ class DeepRT:
         self.execution = execution if execution is not None else ExecutionModel()
         self.utilization_bound = utilization_bound
         self.early_flush = early_flush
+        # Non-RT jobs bypass admission, so their batch is bounded here
+        # rather than by the imitator; an execution backend with a hard
+        # batch ceiling (the decode slot arena) lowers this to its
+        # capacity (see serving/batcher_bridge.build_live_scheduler).
+        self.nonrt_batch_cap = NONRT_BATCH_CAP
         self.metrics = Metrics()
 
         if device is None:
@@ -152,7 +161,7 @@ class DeepRT:
     def _admit(self, request: Request) -> None:
         self.admitted.append(request)
         self.disbatcher.add_request(request)
-        cap = None if request.category.realtime else NONRT_BATCH_CAP
+        cap = None if request.category.realtime else self.nonrt_batch_cap
         for i in range(request.n_frames):
             arrival = request.frame_arrival(i)
             self.loop.schedule(

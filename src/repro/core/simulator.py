@@ -353,9 +353,10 @@ class Metrics:
     real_rows: int = 0
     bucket_rows: int = 0
     # Host-side scheduler time per dispatch decision (seconds) — the time
-    # the event loop is stalled picking + submitting a job. With async
-    # dispatch this is microseconds; with blocking dispatch it includes
-    # the whole device execution.
+    # the event loop is stalled picking + submitting a job. Async dispatch
+    # keeps this at microseconds; the deleted legacy blocking path used to
+    # stall here for the whole device execution (the recorded numbers the
+    # hot-path benchmark replays as its before-arm).
     dispatch_overheads: List[float] = field(default_factory=list)
     overruns: int = 0
     first_arrival: Optional[float] = None

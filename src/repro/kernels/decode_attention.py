@@ -11,11 +11,13 @@ Masking is fully position-driven: the caller passes per-slot absolute
 positions and a validity bitmap, so full caches, ring (sliding-window)
 caches, and continuous-batching caches with per-sequence cursors all use
 the same kernel. Fully-masked kv blocks are SKIPPED (``pl.when``), which
-is bit-identical for any row with at least one live slot and is what
-makes batch-bucket padding cheap: the serving engine parks pad rows at
-cursor 0, so their blocks past the first do no MXU work. A row with zero
-live slots outputs exact 0 (the mathematically sensible "attended to
-nothing"), not the uniform mean-of-V an unskipped softmax would give.
+is bit-identical for any row with at least one live slot. On top of that
+sits the slot-arena path: ``active`` is a per-row bitmap (the engine's
+live-slot set — batch size as DATA, not shape), folded into every
+block's mask, so a dead arena row skips ALL its kv blocks — the whole
+row costs two scalar compares per block instead of attention. A row with
+zero live slots outputs exact 0 (the mathematically sensible "attended
+to nothing"), not the uniform mean-of-V an unskipped softmax would give.
 
 The serving engine's decode hot loop is THE perf-critical path of the
 DeepRT reproduction (batched decode job instances are what the GPU/TPU
@@ -40,6 +42,7 @@ def _kernel(
     k_ref,  # (1, bk, 1, D)
     v_ref,
     cursor_ref,  # (1, 1) int32
+    active_ref,  # (1, 1) int32 (0/1) — live arena slot?
     pos_ref,  # (1, bk) int32
     valid_ref,  # (1, bk) int32 (0/1)
     o_ref,  # (1, 1, G, D)
@@ -61,18 +64,19 @@ def _kernel(
 
     q = q_ref[0, 0, :, :]  # (G, D)
     cursor = cursor_ref[0, 0]
+    active = active_ref[0, 0] != 0
     pos = pos_ref[0, :]  # (bk,)
     valid = valid_ref[0, :] != 0
 
-    mask = jnp.logical_and(pos <= cursor, valid)
+    mask = jnp.logical_and(jnp.logical_and(pos <= cursor, valid), active)
     if window is not None:
         mask = jnp.logical_and(mask, pos > cursor - window)
 
     # Skip fully-masked kv blocks: a masked block's contribution is
     # exactly zero (p underflows to 0, alpha = 1), so eliding the two
-    # MXU matmuls is bit-identical. This is what makes masked batch
-    # padding cheap — a pad row with cursor 0 skips every block past its
-    # first, and a ring cache skips its unwritten tail.
+    # MXU matmuls is bit-identical. This is what makes dead arena rows
+    # free — ``active=0`` zeroes every block's mask so the row skips ALL
+    # kv blocks — and a ring cache skips its unwritten tail.
     @pl.when(jnp.any(mask))
     def _accumulate():
         k = k_ref[0, :, 0, :]  # (bk, D)
@@ -108,12 +112,15 @@ def decode_attention(
     cursor: jax.Array,  # (B,) int32
     kv_pos: jax.Array,  # (B, S) int32
     kv_valid: jax.Array,  # (B, S) bool
+    active: Optional[jax.Array] = None,  # (B,) bool — None = all live
     *,
     window: Optional[int] = None,
     block_k: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
     b, one, h, d = q.shape
+    if active is None:
+        active = jnp.ones((b,), jnp.int32)
     s, kv = cache_k.shape[1], cache_k.shape[2]
     g = h // kv
     scale = 1.0 / math.sqrt(d)
@@ -143,6 +150,7 @@ def decode_attention(
             pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, k_: (b_, k_, h_, 0)),
             pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, k_: (b_, k_, h_, 0)),
             pl.BlockSpec((1, 1), lambda b_, h_, k_: (b_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, k_: (b_, 0)),
             pl.BlockSpec((1, block_k), lambda b_, h_, k_: (b_, k_)),
             pl.BlockSpec((1, block_k), lambda b_, h_, k_: (b_, k_)),
         ],
@@ -159,6 +167,7 @@ def decode_attention(
         kp,
         vp,
         cursor[:, None].astype(jnp.int32),
+        active[:, None].astype(jnp.int32),
         pp.astype(jnp.int32),
         vv,
     )

@@ -46,6 +46,7 @@ def decode_attention(
     cursor: jax.Array,
     kv_pos: jax.Array,
     kv_valid: jax.Array,
+    active: Optional[jax.Array] = None,  # (B,) live-slot bitmap (arena)
     *,
     window: Optional[int] = None,
 ) -> jax.Array:
@@ -56,6 +57,7 @@ def decode_attention(
         cursor,
         kv_pos,
         kv_valid,
+        active,
         window=window,
         interpret=_interpret(),
     )

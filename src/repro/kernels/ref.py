@@ -52,6 +52,7 @@ def decode_attention_ref(
     cursor: jax.Array,  # (B,) current absolute position
     kv_pos: jax.Array,  # (B, S)
     kv_valid: jax.Array,  # (B, S) bool
+    active: Optional[jax.Array] = None,  # (B,) bool — dead rows output 0
     *,
     window: Optional[int] = None,
 ) -> jax.Array:
@@ -65,10 +66,18 @@ def decode_attention_ref(
     mask = (kv_pos <= cursor[:, None]) & kv_valid
     if window is not None:
         mask &= kv_pos > (cursor[:, None] - window)
+    if active is not None:
+        mask &= active[:, None]
     logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache_v.astype(jnp.float32))
-    return out.reshape(b, 1, h, d).astype(q.dtype)
+    out = out.reshape(b, 1, h, d)
+    if active is not None:
+        # Match the kernel's skip semantics: a fully-dead row attends to
+        # nothing and outputs exact 0 (softmax over all-NEG_INF would
+        # instead emit the uniform mean of V).
+        out = jnp.where(active[:, None, None, None], out, 0.0)
+    return out.astype(q.dtype)
 
 
 def rglru_ref(

@@ -357,10 +357,13 @@ def mha_decode(
     rope_kind: str = "rope",
     mrope_position: Optional[jax.Array] = None,  # (3, B, 1)
     impl: str = "xla",
+    active: Optional[jax.Array] = None,  # (B,) live-slot bitmap (arena)
 ) -> jax.Array:
     """One-token attention against a (possibly ring) KV cache. The caller
     has already written this token's K/V into the cache (see kvcache.py);
-    q is projected and rotated here."""
+    q is projected and rotated here. ``active`` marks live slot-arena
+    rows: dead rows are fully masked (the Pallas kernel then skips all
+    their KV blocks), so batch size is data, not shape."""
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     if "bq" in p:
         q = q + p["bq"]
@@ -372,9 +375,12 @@ def mha_decode(
         from repro.kernels import ops as kernel_ops
 
         o = kernel_ops.decode_attention(
-            q, cache_k, cache_v, position, kv_positions, kv_valid, window=window
+            q, cache_k, cache_v, position, kv_positions, kv_valid, active,
+            window=window,
         )
     else:
+        if active is not None:
+            kv_valid = kv_valid & active[:, None]
         mask = build_mask(position[:, None], kv_positions, kv_valid, causal, window)
         o = dense_attention(q, cache_k, cache_v, mask)
     return project_out(p, o)

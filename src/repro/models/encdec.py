@@ -233,10 +233,12 @@ class EncDecTransformer:
         return dict(cache, cross_k=ks, cross_v=vs)
 
     def decode_step(
-        self, params, cache, token: jax.Array, cursor: jax.Array
+        self, params, cache, token: jax.Array, cursor: jax.Array,
+        active: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, Any]:
         """One decoder token against self+cross caches.
-        token: (B,), cursor: (B,)."""
+        token: (B,), cursor: (B,); ``active``: (B,) live-slot bitmap
+        (slot arena) — dead rows are masked out of both attentions."""
         cfg = self.cfg
         b = token.shape[0]
         x = embed_lookup(params["embed"], token[:, None])
@@ -244,6 +246,8 @@ class EncDecTransformer:
         enc_len = cache["cross_k"].shape[2]
         enc_pos = jnp.broadcast_to(jnp.arange(enc_len)[None, :], (b, enc_len))
         enc_valid = jnp.ones((b, enc_len), bool)
+        if active is not None:
+            enc_valid = enc_valid & active[:, None]
 
         def block(x, scanned):
             p, sk, sv, ck, cv = scanned
@@ -256,6 +260,7 @@ class EncDecTransformer:
             y = mha_decode(
                 p["self_attn"], h, cursor, cache_k, cache_v, kv_pos, valid,
                 rope_theta=None, rope_kind="none", impl=cfg.impl,
+                active=active,
             )
             x = x + y
             hc = apply_norm(x, p["norm_cross"], cfg.norm)

@@ -36,6 +36,48 @@ def cache_nbytes(cache) -> int:
     )
 
 
+def cache_reset_rows(cache, rows: jax.Array):
+    """Reset the given batch rows of a cache pytree to their initial state.
+
+    ``rows``: (B,) bool — True rows are wiped, False rows untouched. Every
+    cache leaf in this module is batch-major EXCEPT the stacked superblock
+    entries, which carry a leading ``n_super`` axis before batch; leaves
+    are matched by which axis equals ``B``. Ring-cache ``pos`` slots reset
+    to -1 (the "never written" sentinel ``ring_cache_views`` checks),
+    everything else to zero.
+
+    This is the slot arena's row recycle: jitted with the cache donated
+    (the engine's tpu/gpu default) it rewrites rows IN PLACE; without
+    donation XLA materializes a fresh buffer, but either way the arena
+    stays ONE pytree — no per-bucket cache objects are created or
+    destroyed when slots turn over.
+    """
+    b = rows.shape[0]
+
+    def key_names(path):
+        return [getattr(k, "key", getattr(k, "name", None)) for k in path]
+
+    def reset(path, x):
+        if not hasattr(x, "dtype"):
+            return x
+        names = key_names(path)
+        # Stacked superblock leaves are (n_super, B, ...); everything else
+        # is batch-major. Dispatch on the path, not on shape coincidences.
+        axis = 1 if names and names[0] == "super" else 0
+        if x.ndim <= axis or x.shape[axis] != b:
+            raise ValueError(
+                f"cache leaf {names} has no batch axis {axis} of size {b}: "
+                f"{x.shape}"
+            )
+        shape = [1] * x.ndim
+        shape[axis] = b
+        mask = rows.reshape(shape)
+        fill = jnp.array(-1 if "pos" in names else 0, x.dtype)
+        return jnp.where(mask, fill, x)
+
+    return jax.tree_util.tree_map_with_path(reset, cache)
+
+
 def attn_cache_init(batch: int, max_len: int, n_kv: int, head_dim: int, dtype):
     return {
         "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),

@@ -196,6 +196,7 @@ def _apply_block_decode(
     cursor: jax.Array,  # (B,) absolute position of this token
     cache: Dict,
     mrope_position: Optional[jax.Array] = None,
+    active: Optional[jax.Array] = None,  # (B,) live-slot bitmap (arena)
 ) -> Tuple[jax.Array, Dict]:
     h = apply_norm(x, p["norm1"], cfg.norm)
     if kind in ("attn", "swa"):
@@ -223,6 +224,7 @@ def _apply_block_decode(
             rope_kind=cfg.rope_kind,
             mrope_position=mrope_position,
             impl=cfg.impl,
+            active=active,
         )
     elif kind == "rglru":
         y2d, state = griffin_block(
@@ -406,8 +408,15 @@ class Transformer:
         token: jax.Array,  # (B,) int32
         cursor: jax.Array,  # (B,) absolute position of this token
         mrope_position: Optional[jax.Array] = None,  # (3, B, 1)
+        active: Optional[jax.Array] = None,  # (B,) bool live-slot bitmap
     ) -> Tuple[jax.Array, Any]:
-        """One-token decode: returns (logits (B, V) f32, new cache)."""
+        """One-token decode: returns (logits (B, V) f32, new cache).
+
+        ``active`` marks live slot-arena rows (serving/engine.py): dead
+        rows are fully masked out of attention (the Pallas kernel skips
+        all their KV blocks) and their logits are unspecified — the
+        engine never reads them. ``None`` means every row is live.
+        """
         cfg = self.cfg
         x = self._embed(params, token[:, None])
         if cfg.rope_kind == "mrope" and mrope_position is None:
@@ -423,7 +432,7 @@ class Transformer:
                 for j, kind in enumerate(cfg.block_pattern):
                     x, c = _apply_block_decode(
                         cfg, kind, layer_params[j], x, cursor,
-                        layer_cache[j], mrope_position,
+                        layer_cache[j], mrope_position, active,
                     )
                     new_layer_cache.append(c)
                 return x, new_layer_cache
@@ -435,7 +444,7 @@ class Transformer:
         new_tail = []
         for p_layer, kind, c in zip(params["tail"], cfg.tail_kinds, cache["tail"]):
             x, c2 = _apply_block_decode(
-                cfg, kind, p_layer, x, cursor, c, mrope_position
+                cfg, kind, p_layer, x, cursor, c, mrope_position, active
             )
             new_tail.append(c2)
         new_cache["tail"] = new_tail

@@ -10,15 +10,20 @@ two swaps:
   completion lands back on the loop thread from a lightweight waiter
   keyed off ``block_until_ready``.
 
-``dispatch="sync"`` recreates the old blocking path (the EDF worker's
-``exec_time_fn`` runs the job synchronously and stalls the loop for its
-duration). It exists ONLY as the A/B baseline for
-``benchmarks/serving_hotpath.py`` and will be removed once the async
-path has a few PRs of mileage — do not build on it.
+(The legacy blocking dispatch mode — ``dispatch="sync"``, where the EDF
+worker's exec_time_fn stalled the loop for each job's duration — is
+deleted; ``benchmarks/serving_hotpath.py`` replays its recorded numbers
+for the before/after instead of re-running dead code.)
 
 ``build_live_scheduler`` also runs the offline Performance Profiler
 (paper §4.1) over the engine to produce the WCET table the Admission
-Control Module consumes.
+Control Module consumes. Profiling mirrors the engine's two regimes:
+prefill categories get a power-of-two bucket curve; decode categories
+get ONE flat entry measured with every arena row live (the worst case of
+the single program that serves all batch sizes) via
+``ProfileTable.record_flat``. The engine's arena is sized with the
+shared ``bucketing.arena_slots`` so the profiled program IS the served
+program.
 """
 from __future__ import annotations
 
@@ -30,23 +35,12 @@ from repro.core import (
     ExecutionModel,
     MeasuredProfiler,
     ProfileTable,
-    SequentialDevice,
     WallClock,
 )
+from repro.core.bucketing import arena_slots, bucket
+from repro.core.scheduler import NONRT_BATCH_CAP
 from repro.serving.async_device import AsyncDevice
 from repro.serving.engine import InferenceEngine
-
-
-class _BlockingDevice(SequentialDevice):
-    """Sync-arm device: by the time the EDF worker calls ``submit`` the
-    job has ALREADY executed (exec_time_fn blocked the loop for its
-    duration), so the completion fires immediately instead of being
-    re-scheduled ``exec_time`` in the future — which would double-count
-    every job's duration in latencies and busy_until."""
-
-    def submit(self, job, exec_time, on_complete, job_bytes=0.0):
-        super().submit(job, 0.0, on_complete, job_bytes)
-        self.busy_time += exec_time
 
 
 def profile_engine(
@@ -56,19 +50,55 @@ def profile_engine(
     runs: int = 5,
     quantile: float = 0.99,
 ) -> ProfileTable:
-    """Offline profiler pass (paper §4.1): p99 over repeated runs per
-    (model, shape, batch bucket). Batch sizes are deduped to buckets —
-    the engine executes the identical program for every size in one."""
+    """Offline profiler pass (paper §4.1): p99 over repeated runs.
+
+    Prefill: per batch-bucket curve (deduped to buckets — the engine
+    executes the identical program for every size in one). Decode: the
+    slot arena runs one program whose cost is flat in batch size, so a
+    per-batch curve would time the same program repeatedly; measure the
+    worst case (all ``max_slots`` rows live) once and record it flat.
+    """
+    cats = list(categories)
+    # ProfileTable keys (and the bridge's kind_of map) are (model, shape)
+    # — one kind per key by design. Profiling a shape as BOTH kinds would
+    # make the flat decode entry silently shadow the prefill curve; fail
+    # loudly instead.
+    seen_kinds: Dict[Tuple[str, Tuple[int, ...]], str] = {}
+    for mid, shape_key, kind in cats:
+        prev = seen_kinds.setdefault((mid, tuple(shape_key)), kind)
+        if prev != kind:
+            raise ValueError(
+                f"category ({mid}, {shape_key}) profiled as both {prev!r} "
+                f"and {kind!r}; WCET keys carry no kind — use distinct "
+                f"shapes per kind"
+            )
     table = ProfileTable()
     profiler = MeasuredProfiler(warmup=2, runs=runs, quantile=quantile)
-    for mid, shape_key, kind in categories:
-        profiler.profile(
-            table,
-            mid,
-            shape_key,
-            list(batch_sizes),
-            lambda b, _m=mid, _s=shape_key, _k=kind: engine.execute(_m, _s, b, _k),
-        )
+    for mid, shape_key, kind in cats:
+        if kind == "decode":
+            # Measure into a throwaway table (never into ``table``, whose
+            # (mid, shape) key space the flat entry will own), with
+            # bucketed=False: max_slots need not be a power of two, and
+            # rounding it up would probe a batch the engine rejects.
+            probe = ProfileTable()
+            profiler.profile(
+                probe,
+                mid,
+                shape_key,
+                [engine.max_slots],
+                lambda b, _m=mid, _s=shape_key: engine.execute(_m, _s, b, "decode"),
+                bucketed=False,
+            )
+            wcet = probe.entries[(mid, tuple(shape_key))][engine.max_slots]
+            table.record_flat(mid, shape_key, wcet, engine.max_slots)
+        else:
+            profiler.profile(
+                table,
+                mid,
+                shape_key,
+                list(batch_sizes),
+                lambda b, _m=mid, _s=shape_key, _k=kind: engine.execute(_m, _s, b, _k),
+            )
     return table
 
 
@@ -77,17 +107,23 @@ def build_live_scheduler(
     categories: Iterable[Tuple[str, Tuple[int, ...], str]],
     batch_sizes=(1, 2, 4, 8),
     utilization_bound: float = 1.0,
-    dispatch: str = "async",
     engine: Optional[InferenceEngine] = None,
 ) -> Tuple[DeepRT, InferenceEngine, ProfileTable]:
     """Build the live wall-clock DeepRT over a compiled engine.
 
-    ``dispatch="async"`` (default): zero-stall pipeline — profiled WCET
-    estimates drive ``busy_until``, the AsyncDevice measures reality.
-    ``dispatch="sync"``: legacy blocking execution, A/B baseline only.
+    Zero-stall pipeline: profiled WCET estimates drive ``busy_until``,
+    the AsyncDevice measures reality. The engine's decode arena is sized
+    to the largest requested batch (``arena_slots``), so every admitted
+    job fits the one resident program.
     """
     if engine is None:
-        engine = InferenceEngine(configs)
+        # Non-RT requests bypass admission (their batches are bounded by
+        # NONRT_BATCH_CAP, not by the imitator), so the arena must hold
+        # that cap too — RT oversubscription is rejected at admission via
+        # the flat table's inf beyond max_slots.
+        engine = InferenceEngine(
+            configs, max_slots=arena_slots(max(*batch_sizes, NONRT_BATCH_CAP))
+        )
     cats = list(categories)
     kinds = {(mid, shape): kind for mid, shape, kind in cats}
     table = profile_engine(engine, cats, batch_sizes)
@@ -102,36 +138,33 @@ def build_live_scheduler(
             job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
         )
 
-    if dispatch == "async":
-        device = AsyncDevice(
-            loop,
-            dispatch_fn=lambda job: engine.dispatch(
-                job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
-            ),
-        )
-        # exec_time under async dispatch is the busy-until ESTIMATE (the
-        # profiled WCET); the device reports the real completion instant.
-        sched = DeepRT(
-            table,
-            loop=loop,
-            execution=ExecutionModel(actual_fn=lambda job, wcet: wcet),
-            utilization_bound=utilization_bound,
-            device=device,
-        )
-    elif dispatch == "sync":
-        def run_job(job, wcet):
-            return engine.execute(
-                job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
-            )
+    def executed_rows(job) -> int:
+        # Arena decode always runs max_slots rows; prefill pads to the
+        # power-of-two bucket. Keeps Metrics.padding_waste describing
+        # what the engine really launched.
+        if kind_of(job) == "decode":
+            return engine.max_slots
+        return bucket(job.batch_size)
 
-        sched = DeepRT(
-            table,
-            loop=loop,
-            execution=ExecutionModel(actual_fn=run_job),
-            utilization_bound=utilization_bound,
-            device=_BlockingDevice(loop),
-        )
-    else:
-        raise ValueError(f"dispatch must be 'async' or 'sync', got {dispatch!r}")
+    device = AsyncDevice(
+        loop,
+        dispatch_fn=lambda job: engine.dispatch(
+            job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
+        ),
+    )
+    # exec_time under async dispatch is the busy-until ESTIMATE (the
+    # profiled WCET); the device reports the real completion instant.
+    sched = DeepRT(
+        table,
+        loop=loop,
+        execution=ExecutionModel(actual_fn=lambda job, wcet: wcet),
+        utilization_bound=utilization_bound,
+        device=device,
+    )
     sched.worker.job_bytes_fn = job_bytes
+    sched.worker.executed_rows_fn = executed_rows
+    # Non-RT requests bypass admission (the flat table's inf cannot
+    # reject them), so bound their batches by the arena too — including
+    # for caller-supplied engines whose max_slots may be small.
+    sched.nonrt_batch_cap = min(sched.nonrt_batch_cap, engine.max_slots)
     return sched, engine, table

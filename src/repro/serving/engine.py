@@ -1,11 +1,35 @@
 """Inference engine: compiled batched steps for DeepRT categories.
 
-A DeepRT *category* is (model_id, shape bucket). The engine pre-compiles
-one XLA program per (model, kind, seq bucket, batch bucket) — batch
-sizes are padded up to the next power of two via the SHARED
-``repro.core.bucketing.bucket`` (the same rounding the profiler grid and
-the admission WCET lookup use), so the compile count stays logarithmic
-while the table stays consistent with what actually runs.
+Two execution regimes, matching the two step kinds of the shape pool:
+
+- PREFILL (full forward over (b, seq) tokens -> last-token logits) is
+  bucketed: one XLA program per (model, seq, batch bucket), batch sizes
+  padded up to the next power of two via the SHARED
+  ``repro.core.bucketing.bucket`` (the same rounding the profiler grid
+  and the admission WCET lookup use), so the compile count stays
+  logarithmic while the table stays consistent with what actually runs.
+
+- DECODE (one token against a KV cache) runs on a SLOT ARENA: each
+  (model, seq) owns ONE resident KV arena of ``max_slots`` rows — a
+  single donated buffer that lives across steps — and ONE compiled
+  program that always executes all ``max_slots`` rows. The live batch
+  size is carried as DATA (a per-row active bitmap + per-row cursors),
+  not as a shape:
+
+    * zero decode recompiles at runtime: any batch 1..max_slots hits the
+      same program, so a DisBatcher job crossing an old bucket boundary
+      can no longer land on a cold program (the lazy-compile stall that
+      could blow a deadline on its own);
+    * zero cache churn: there is no per-bucket cache to re-create when
+      the batch size changes — rows are assigned/freed by the slot
+      allocator (``alloc_slots``/``free_slots``) and recycled with an
+      in-place row reset (``kvcache.cache_reset_rows``), never by
+      re-allocating the arena;
+    * flat per-step cost: dead rows carry ``active=0`` so the decode
+      attention path (Pallas kernel block-skip, or the dense mask) does
+      no KV work for them — admission's flat decode WCET
+      (``ProfileTable.record_flat``) is the cost of the program that
+      really runs, at every batch size.
 
 Hot-path design (the zero-stall serving pipeline):
 
@@ -13,30 +37,30 @@ Hot-path design (the zero-stall serving pipeline):
   returns futures, the host thread goes straight back to scheduling, and
   the ``AsyncDevice`` waiter observes completion via ``StepHandle.wait``.
   ``execute`` (= dispatch + wait) remains the synchronous path for the
-  offline profiler and the before/after benchmark A/B.
-- KV caches are DONATED (``jax.jit(..., donate_argnums=...)``): each
-  decode step updates the cache in place instead of allocating a full
-  copy — per-step allocation cost drops from O(cache) to O(batch).
-- Input staging arrays are preallocated per (kind, model, seq, bucket):
-  no per-call ``jnp.zeros`` allocation or host->device transfer on the
-  hot path (see ``_stage`` for the double-buffering plan once real
-  token ingestion writes into them).
-- Decode is padding-free in effect: a true batch of k runs in a
-  ``bucket(k)``-slot buffer, but pad rows carry cursor 0 so the
-  position/validity masking (the same bitmap path the decode Pallas
-  kernel uses) reduces their attended KV slots to one — pad rows cost
-  ~nothing instead of a full-seq attention row. ``stats`` exposes the
-  measured real-vs-total slot accounting.
+  offline profiler and the benchmarks.
+- KV arenas are DONATED (``jax.jit(..., donate_argnums=...)``) where the
+  backend profits from it: each decode step updates the arena in place
+  (buffer identity is preserved across steps), so per-step allocation is
+  O(batch) instead of O(cache). ``donate_cache=None`` resolves by
+  backend: True on tpu/gpu, False on cpu — CPU XLA honors the aliasing
+  but charges a fixed per-dispatch donation bookkeeping cost (~50µs+ per
+  step, growing with the number of donated leaves) that swamps the
+  avoided copy at small model sizes; see BENCH_serving_hotpath.json.
+- Input staging arrays are preallocated per program: no per-call
+  ``jnp.zeros`` allocation or host->device transfer on the hot path.
 
-Two step kinds per the shape pool:
-- ``prefill``: full forward over (b, seq) tokens -> last-token logits
-- ``decode`` : one token against a seq-length KV cache
+``max_slots`` sizing: use ``repro.core.bucketing.arena_slots`` over the
+largest batch admission can produce — Phase 1 bounds the mean frames per
+DisBatcher window at ``n_g = floor(sum_m W_g / p_m)``, so
+``arena_slots(n_g_max + 1)`` rows suffice for every admissible job (the
+ROADMAP "device contract" note records the rule). Decode dispatches
+larger than ``max_slots`` are rejected loudly rather than re-shaped.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +68,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.bucketing import bucket
 from repro.models import model_for
-from repro.models.kvcache import cache_nbytes
+from repro.models.kvcache import cache_nbytes, cache_reset_rows
 
 
 @dataclass
@@ -55,7 +79,7 @@ class StepHandle:
     mid: str
     kind: str
     true_batch: int
-    bucket_batch: int
+    bucket_batch: int  # prefill: the pow2 bucket; decode: max_slots
 
     def wait(self) -> Any:
         """Block until the device finishes; returns the ready outputs."""
@@ -63,46 +87,94 @@ class StepHandle:
         return self.outputs
 
 
+@dataclass
+class SlotArena:
+    """One model's resident decode state for one seq length.
+
+    ``cache`` is the single KV buffer (batch axis = max_slots) that
+    lives across steps — donated (in-place, tpu/gpu default) or
+    functionally replaced (cpu default; see the donate gate in the
+    module docstring). ``cur``/``active`` are DEVICE-resident
+    per-row cursors and the live-slot bitmap: the compiled step consumes
+    them directly and returns the advanced cursors, so steady-state
+    slot-mode decode does ZERO host->device transfers — membership
+    changes (alloc/free) are the only time the bitmap is re-uploaded.
+    ``free`` are the unassigned row ids; ``allocs``/``resets`` count
+    allocator traffic for the churn metrics.
+    """
+
+    cache: Any
+    max_slots: int
+    cur: jax.Array = None
+    active: jax.Array = None
+    free: List[int] = field(default_factory=list)
+    allocs: int = 0
+    resets: int = 0
+
+    @property
+    def live(self) -> Tuple[int, ...]:
+        free = set(self.free)
+        return tuple(i for i in range(self.max_slots) if i not in free)
+
+
 class InferenceEngine:
     def __init__(
         self,
         configs: Dict[str, ModelConfig],
         seed: int = 0,
-        donate_cache: bool = True,
+        donate_cache: Optional[bool] = None,
         masked_decode: bool = True,
+        max_slots: int = 8,
     ):
-        """``donate_cache=False`` and ``masked_decode=False`` recreate the
-        old copying / blind-padding behavior — kept ONLY so the hot-path
-        benchmark and the equivalence tests can A/B against them."""
+        """``donate_cache``: None resolves by backend (module docstring);
+        explicit True/False force it — the benchmark A/Bs both arms.
+        ``masked_decode=False`` recreates blind padding (every arena row
+        does full attention work) — kept ONLY for the padding-waste A/B.
+        ``max_slots``: decode arena rows per (model, seq); see the
+        module docstring for the sizing rule.
+        """
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
         self.configs = dict(configs)
         self.models = {mid: model_for(cfg) for mid, cfg in configs.items()}
+        if donate_cache is None:
+            donate_cache = jax.default_backend() != "cpu"
         self.donate_cache = donate_cache
         self.masked_decode = masked_decode
+        self.max_slots = max_slots
         key = jax.random.PRNGKey(seed)
         self.params = {}
         for i, (mid, model) in enumerate(self.models.items()):
             self.params[mid] = model.init(jax.random.fold_in(key, i))
         self._compiled: Dict[Tuple, Any] = {}
-        self._caches: Dict[Tuple, Any] = {}
+        self._arenas: Dict[Tuple[str, int], SlotArena] = {}
         self._staging: Dict[Tuple, Dict[str, jax.Array]] = {}
-        self._cursors: Dict[Tuple, jax.Array] = {}
-        # Measured padding accounting (decode): attended KV slots.
+        # Prefix-mode decode inputs per (mid, seq, live-count): tiny
+        # (max_slots,) arrays, cached so the steady-state hot loop does
+        # zero host->device transfers.
+        self._decode_inputs: Dict[Tuple, Tuple[jax.Array, jax.Array]] = {}
+        self._reset_fn = jax.jit(
+            cache_reset_rows, donate_argnums=(0,) if donate_cache else ()
+        )
+        # Measured padding/compile accounting.
         self.stats: Dict[str, int] = {}
         self.reset_stats()
 
     def reset_stats(self) -> None:
-        """Zero the padding/dispatch counters. build_live_scheduler calls
-        this after the offline profiling pass so ``stats`` reflects only
-        served traffic, not warmup/profiling dispatches."""
+        """Zero the padding/dispatch/compile counters. build_live_scheduler
+        calls this after the offline profiling pass so ``stats`` reflects
+        only served traffic — in particular ``decode_compiles`` counts
+        programs built AFTER warm-up, which the slot arena holds at 0."""
         self.stats.update(
             real_rows=0, bucket_rows=0, real_slots=0, total_slots=0,
-            dispatches=0,
+            dispatches=0, decode_compiles=0, prefill_compiles=0,
         )
 
     # ----- compiled step factories ----------------------------------------
     def _prefill_fn(self, mid: str, seq: int, batch: int):
         key = ("prefill", mid, seq, batch)
         if key not in self._compiled:
+            self.stats["prefill_compiles"] += 1
             model = self.models[mid]
 
             def run(params, tokens):
@@ -112,32 +184,108 @@ class InferenceEngine:
             self._compiled[key] = jax.jit(run)
         return self._compiled[key]
 
-    def _decode_fn(self, mid: str, seq: int, batch: int):
-        key = ("decode", mid, seq, batch, self.donate_cache)
+    def _decode_fn(self, mid: str, seq: int):
+        """THE decode program for (mid, seq): every live batch <=
+        max_slots executes this one compile — batch size is data. The
+        program also advances the live rows' cursors on-device (clamped
+        at the cache edge; a real system would evict), so the slot-mode
+        hot loop never round-trips cursors through the host."""
+        key = ("decode", mid, seq)
         if key not in self._compiled:
+            self.stats["decode_compiles"] += 1
             model = self.models[mid]
 
-            def run(params, cache, tok, cur):
-                return model.decode_step(params, cache, tok, cur)
+            def run(params, cache, tok, cur, active):
+                logits, new_cache = model.decode_step(
+                    params, cache, tok, cur, active=active
+                )
+                new_cur = jnp.where(
+                    active, jnp.minimum(cur + 1, seq - 1), cur
+                )
+                return logits, new_cache, new_cur
 
             donate = (1,) if self.donate_cache else ()
             self._compiled[key] = jax.jit(run, donate_argnums=donate)
         return self._compiled[key]
 
-    def _cache_for(self, mid: str, seq: int, batch: int):
-        key = (mid, seq, batch)
-        if key not in self._caches:
-            self._caches[key] = self.models[mid].init_cache(batch, seq)
-        return self._caches[key]
+    # ----- slot arena ------------------------------------------------------
+    def arena(self, mid: str, seq: int) -> SlotArena:
+        """The resident decode arena for (mid, seq), created on first use."""
+        key = (mid, seq)
+        if key not in self._arenas:
+            self._arenas[key] = SlotArena(
+                cache=self.models[mid].init_cache(self.max_slots, seq),
+                max_slots=self.max_slots,
+                cur=jnp.zeros((self.max_slots,), jnp.int32),
+                active=jnp.zeros((self.max_slots,), bool),
+                free=list(range(self.max_slots)),
+            )
+        return self._arenas[key]
+
+    def alloc_slots(
+        self, mid: str, seq: int, n: int, start_pos: int = 0
+    ) -> Tuple[int, ...]:
+        """Assign ``n`` arena rows to an admitted request.
+
+        Recycled rows are wiped by ``cache_reset_rows`` — with donation
+        (the tpu/gpu default) that is a true in-place write with no
+        O(arena) copy; without donation (the cpu default) XLA produces a
+        fresh arena-sized buffer, the copy cost the backend gate traded
+        for lower per-dispatch overhead. Either way no per-bucket cache
+        objects are created or destroyed — the churn that used to happen
+        on every batch-bucket change. Raises when the arena is full;
+        admission sized ``max_slots`` (and the flat WCET table charges
+        inf beyond it) so a full arena means an admission bug, not a
+        capacity surprise.
+        """
+        arena = self.arena(mid, seq)
+        if n < 1:
+            raise ValueError(f"need >= 1 slot, got {n}")
+        if n > len(arena.free):
+            raise RuntimeError(
+                f"arena {mid}/seq={seq} exhausted: want {n}, "
+                f"free {len(arena.free)}/{arena.max_slots} — admission "
+                f"must bound live batches by max_slots"
+            )
+        slots = tuple(sorted(arena.free)[:n])
+        arena.free = [s for s in arena.free if s not in slots]
+        rows = jnp.zeros((arena.max_slots,), bool).at[jnp.array(slots)].set(True)
+        arena.cache = self._reset_fn(arena.cache, rows)
+        arena.cur = jnp.where(rows, jnp.int32(start_pos), arena.cur)
+        arena.active = arena.active | rows
+        arena.allocs += n
+        arena.resets += n
+        return slots
+
+    def free_slots(self, mid: str, seq: int, slots: Sequence[int]) -> None:
+        """Return rows to the allocator (wiped lazily on next alloc)."""
+        arena = self.arena(mid, seq)
+        ids = [int(s) for s in slots]
+        if not ids:
+            return  # freeing nothing is a no-op, not an indexing error
+        bad = [s for s in ids if not 0 <= s < arena.max_slots]
+        if bad:
+            raise ValueError(f"slot ids out of range: {bad}")
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate slot ids in free: {sorted(ids)}")
+        not_live = sorted(set(ids) - set(arena.live))
+        if not_live:
+            raise ValueError(f"double free / never-allocated slots {not_live}")
+        arena.free.extend(ids)
+        rows = jnp.zeros((arena.max_slots,), bool).at[jnp.array(ids)].set(True)
+        arena.active = arena.active & ~rows
+
+    def arena_nbytes(self, mid: str, seq: int) -> int:
+        """Resident bytes of the (mid, seq) decode arena."""
+        return cache_nbytes(self.arena(mid, seq).cache)
 
     # ----- preallocated input staging -------------------------------------
     def _stage(self, kind: str, mid: str, seq: int, batch: int) -> Dict[str, jax.Array]:
-        """Preallocated input arrays per (kind, model, seq, bucket): no
-        fresh ``jnp.zeros`` allocation or host->device transfer per call.
-        Inputs are synthetic (zero tokens) for now, so one buffer per key
-        suffices; once real token ingestion lands, writes must
-        double-buffer (fill buffer B while the in-flight job reads A) —
-        reintroduce the flip at that point, not before."""
+        """Preallocated input arrays per program: no fresh ``jnp.zeros``
+        allocation or host->device transfer per call. Inputs are
+        synthetic (zero tokens) for now, so one buffer per key suffices;
+        once real token ingestion lands, writes must double-buffer (fill
+        buffer B while the in-flight job reads A)."""
         key = (kind, mid, seq, batch)
         buf = self._staging.get(key)
         if buf is None:
@@ -148,22 +296,27 @@ class InferenceEngine:
             self._staging[key] = buf
         return buf
 
-    def _cursor_for(self, seq: int, batch: int, true_batch: int) -> jax.Array:
-        """Per-row cursors: real rows sit at position seq-1; pad rows (the
-        validity-bitmap path) sit at 0, so masking shrinks their attended
-        KV range to a single slot instead of a full seq-length row."""
+    def _prefix_inputs(
+        self, mid: str, seq: int, k: int
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(cursors, active) for a job occupying the first ``k`` arena
+        rows: live rows sit at position seq-1, dead rows carry active=0
+        so the attention path skips ALL their KV blocks. Cached per
+        (mid, seq, k) — the hot loop re-sends resident device arrays."""
         if not self.masked_decode:
-            true_batch = batch  # blind padding: every row does full work
-        key = (seq, batch, true_batch)
-        if key not in self._cursors:
+            k = self.max_slots  # blind padding: every row does full work
+        key = (mid, seq, k)
+        if key not in self._decode_inputs:
+            m = self.max_slots
             cur = jnp.concatenate(
                 [
-                    jnp.full((true_batch,), seq - 1, jnp.int32),
-                    jnp.zeros((batch - true_batch,), jnp.int32),
+                    jnp.full((k,), seq - 1, jnp.int32),
+                    jnp.zeros((m - k,), jnp.int32),
                 ]
             )
-            self._cursors[key] = cur
-        return self._cursors[key]
+            active = (jnp.arange(m) < k)
+            self._decode_inputs[key] = (cur, active)
+        return self._decode_inputs[key]
 
     # ----- execution ---------------------------------------------------------
     def warmup(self, mid: str, shape_key: Tuple[int, ...], batch_sizes,
@@ -173,47 +326,89 @@ class InferenceEngine:
 
     def dispatch(
         self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
-        kind: str = "prefill",
+        kind: str = "prefill", slots: Optional[Sequence[int]] = None,
     ) -> StepHandle:
         """Launch one batched job WITHOUT waiting for the device.
 
         Returns immediately after JAX async dispatch; the returned
         handle's ``wait()`` blocks until the result is ready (the
-        AsyncDevice calls it from the waiter thread). First call per
-        (kind, model, seq, bucket) compiles — warm up via the profiler.
-        shape_key = (seq_len,) for LM categories.
+        AsyncDevice calls it from the waiter thread).
+
+        shape_key = (seq_len,) for LM categories. Decode jobs run on the
+        slot arena: ``slots`` steps the allocator-assigned rows
+        (continuous batching — the set must be ALL currently live rows:
+        every step writes each live row's cache at its cursor, so
+        stepping a strict subset would clobber the skipped rows; masked
+        per-row cache writes are the extension point if partial stepping
+        is ever needed); ``slots=None`` uses the first ``batch_size``
+        rows (the synthetic profiler/benchmark workload). Either way the
+        SAME compiled program executes — only the active bitmap and
+        cursors change, and in slot mode both are device-resident, so a
+        steady-state step transfers nothing.
         """
         seq = shape_key[0]
-        b = bucket(batch_size)
         self.stats["dispatches"] += 1
-        self.stats["real_rows"] += batch_size
-        self.stats["bucket_rows"] += b
         if kind == "prefill":
+            b = bucket(batch_size)
+            self.stats["real_rows"] += batch_size
+            self.stats["bucket_rows"] += b
             fn = self._prefill_fn(mid, seq, b)
             stage = self._stage("prefill", mid, seq, b)
             out = fn(self.params[mid], stage["tokens"])
             return StepHandle(out, mid, kind, batch_size, b)
-        fn = self._decode_fn(mid, seq, b)
-        cache = self._cache_for(mid, seq, b)
-        stage = self._stage("decode", mid, seq, b)
-        cur = self._cursor_for(seq, b, batch_size)
-        k = batch_size if self.masked_decode else b
+        if batch_size > self.max_slots:
+            raise ValueError(
+                f"decode batch {batch_size} > max_slots {self.max_slots}: "
+                f"size the arena via bucketing.arena_slots at engine build"
+            )
+        m = self.max_slots
+        arena = self.arena(mid, seq)
+        fn = self._decode_fn(mid, seq)
+        stage = self._stage("decode", mid, seq, m)
+        if slots is None:
+            if len(arena.free) != arena.max_slots:
+                raise ValueError(
+                    f"arena {mid}/seq={seq} has allocator-live rows "
+                    f"{sorted(arena.live)}; prefix-mode dispatch would "
+                    f"overwrite their KV at synthetic cursors — pass "
+                    f"slots= (all live rows) instead"
+                )
+            cur, active = self._prefix_inputs(mid, seq, batch_size)
+        else:
+            ids = [int(s) for s in slots]
+            if len(ids) != batch_size or len(set(ids)) != len(ids):
+                raise ValueError(
+                    f"need {batch_size} distinct slot ids, got {ids}"
+                )
+            if set(ids) != set(arena.live):
+                raise ValueError(
+                    f"slot dispatch must step ALL live rows "
+                    f"{sorted(arena.live)}, got {sorted(ids)}"
+                )
+            cur, active = arena.cur, arena.active
+        k = batch_size if self.masked_decode else m
+        self.stats["real_rows"] += batch_size
+        self.stats["bucket_rows"] += m
         self.stats["real_slots"] += batch_size * seq
-        self.stats["total_slots"] += k * seq + (b - k)
-        logits, new_cache = fn(self.params[mid], cache, stage["tok"], cur)
-        # Replace (never reuse) the stored cache: with donation the old
-        # buffers were consumed by the step and updated in place.
-        self._caches[(mid, seq, b)] = new_cache
-        return StepHandle(logits, mid, kind, batch_size, b)
+        self.stats["total_slots"] += k * seq
+        logits, new_cache, new_cur = fn(
+            self.params[mid], arena.cache, stage["tok"], cur, active
+        )
+        # The arena pytree is REPLACED every step (with donation the new
+        # leaves alias the old buffers — in-place; without, XLA copied).
+        arena.cache = new_cache
+        if slots is not None:
+            arena.cur = new_cur  # advanced on-device, no host round-trip
+        return StepHandle(logits, mid, kind, batch_size, m)
 
     def execute(
         self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
-        kind: str = "prefill",
+        kind: str = "prefill", slots: Optional[Sequence[int]] = None,
     ) -> float:
         """Run one batched job synchronously; returns wall seconds. The
-        offline profiler path (and the benchmark's blocking A/B arm)."""
+        offline profiler path (and the benchmarks' latency probes)."""
         t0 = time.perf_counter()
-        self.dispatch(mid, shape_key, batch_size, kind).wait()
+        self.dispatch(mid, shape_key, batch_size, kind, slots=slots).wait()
         return time.perf_counter() - t0
 
     # ----- accounting -----------------------------------------------------
@@ -221,18 +416,25 @@ class InferenceEngine:
         self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
         kind: str = "prefill",
     ) -> float:
-        """Resident bytes one job pins on-device (staging + KV cache)."""
+        """Bytes a running job pins on-device (staging + the arena it
+        executes against).
+
+        The arena is model-resident (it neither grows nor moves with the
+        batch), but the device runs one job at a time, so charging it to
+        the in-flight decode job keeps ``resident_bytes``/``peak_bytes``
+        reflecting the KV memory decode actually holds — same contract
+        the per-bucket caches had.
+        """
         seq = shape_key[0]
-        b = bucket(batch_size)
-        n = 4 * b * (seq if kind == "prefill" else 1)  # int32 staging
-        if kind == "decode":
-            n += cache_nbytes(self._cache_for(mid, seq, b))
-        return float(n)
+        if kind == "prefill":
+            return float(4 * bucket(batch_size) * seq)  # int32 tokens
+        staging = 3 * 4 * self.max_slots  # tok + cursors + active
+        return float(staging + self.arena_nbytes(mid, seq))
 
     @property
     def padding_waste(self) -> float:
-        """Measured fraction of attended decode KV slots spent on pad
-        rows (0.0 when every batch exactly fills its bucket)."""
+        """Measured fraction of attended decode KV slots spent on dead
+        rows (0.0 under the masked arena: dead rows attend to nothing)."""
         if self.stats["total_slots"] == 0:
             return 0.0
-        return 1.0 - self.stats["real_slots"] / self.stats["total_slots"]
+        return max(0.0, 1.0 - self.stats["real_slots"] / self.stats["total_slots"])

@@ -1,0 +1,379 @@
+"""Slot-arena continuous batching: allocator, single-program decode,
+donation survival, flat WCET.
+
+Covers the acceptance bars of the arena PR:
+- the slot allocator reuses freed rows and rejects oversubscription /
+  double frees;
+- arena-gathered decode (k live rows of max_slots, scattered or prefix)
+  is bit-identical to the dense per-batch reference on the live rows;
+- one compiled decode program serves every batch size 1..max_slots —
+  a batch sweep that used to cross power-of-two bucket boundaries (and
+  recompile per bucket) triggers ZERO additional compiles;
+- the resident arena survives donation: the same device buffer backs the
+  cache across steps (no per-step O(cache) allocation);
+- in-place row reset (``cache_reset_rows``) wipes exactly the requested
+  rows, including ring-cache position sentinels;
+- decode WCETs are flat: one ``record_flat`` entry answers every batch
+  size, survives JSON round-trips and capacity scaling.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import tiny
+from repro.core.bucketing import arena_slots
+from repro.core.profiler import ProfileTable
+from repro.models import model_for
+from repro.models.kvcache import cache_reset_rows
+from repro.serving.engine import InferenceEngine
+
+MID = "granite-3-2b"
+SEQ = 16
+
+
+def _engine(**kw):
+    kw.setdefault("max_slots", 8)
+    return InferenceEngine({MID: tiny(MID)}, **kw)
+
+
+class TestSlotAllocator:
+    def test_alloc_free_reuse(self):
+        e = _engine()
+        first = e.alloc_slots(MID, SEQ, 3)
+        assert first == (0, 1, 2)
+        e.free_slots(MID, SEQ, [1])
+        # The freed row is recycled (lowest-id-first) — not a fresh one.
+        assert e.alloc_slots(MID, SEQ, 1) == (1,)
+        arena = e.arena(MID, SEQ)
+        assert sorted(arena.live) == [0, 1, 2]
+        assert len(arena.free) == 5
+
+    def test_exhaustion_raises(self):
+        e = _engine(max_slots=2)
+        e.alloc_slots(MID, SEQ, 2)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            e.alloc_slots(MID, SEQ, 1)
+
+    def test_double_free_raises(self):
+        e = _engine()
+        slots = e.alloc_slots(MID, SEQ, 2)
+        e.free_slots(MID, SEQ, slots)
+        with pytest.raises(ValueError, match="double free"):
+            e.free_slots(MID, SEQ, slots)
+
+    def test_free_validates_ids(self):
+        e = _engine(max_slots=4)
+        e.alloc_slots(MID, SEQ, 2)
+        with pytest.raises(ValueError, match="out of range"):
+            e.free_slots(MID, SEQ, [99])
+        with pytest.raises(ValueError, match="duplicate"):
+            e.free_slots(MID, SEQ, [1, 1])
+        with pytest.raises(ValueError, match="never-allocated"):
+            e.free_slots(MID, SEQ, [3])
+        e.free_slots(MID, SEQ, [])  # freeing nothing: no-op
+        # Nothing was mutated by the rejected/empty frees.
+        assert sorted(e.arena(MID, SEQ).live) == [0, 1]
+
+    def test_slot_dispatch_must_step_all_live_rows(self):
+        """A strict subset would silently clobber the skipped live rows'
+        cache at their cursors — rejected until masked writes exist."""
+        e = _engine(max_slots=4)
+        e.alloc_slots(MID, SEQ, 3)
+        with pytest.raises(ValueError, match="ALL live rows"):
+            e.dispatch(MID, (SEQ,), 2, kind="decode", slots=(0, 1))
+        # Duplicate ids cannot fake the live set via set-equality.
+        with pytest.raises(ValueError, match="distinct"):
+            e.dispatch(MID, (SEQ,), 3, kind="decode", slots=(0, 0, 1))
+
+    def test_prefix_dispatch_rejected_while_rows_live(self):
+        """The synthetic prefix workload may not run over an arena that
+        holds allocator-live requests — it would overwrite their KV."""
+        e = _engine(max_slots=4)
+        slots = e.alloc_slots(MID, SEQ, 2)
+        with pytest.raises(ValueError, match="allocator-live"):
+            e.dispatch(MID, (SEQ,), 2, kind="decode")
+        e.free_slots(MID, SEQ, slots)
+        e.dispatch(MID, (SEQ,), 2, kind="decode").wait()  # free again
+
+    def test_oversize_decode_rejected(self):
+        e = _engine(max_slots=4)
+        with pytest.raises(ValueError, match="max_slots"):
+            e.dispatch(MID, (SEQ,), 5, kind="decode")
+
+    def test_realloc_resets_rows_in_place(self):
+        """Recycling a slot wipes exactly its KV rows (a decode step had
+        written nonzero K/V there) without re-creating the arena."""
+        e = _engine(max_slots=4)
+        slots = e.alloc_slots(MID, SEQ, 2)
+        e.dispatch(MID, (SEQ,), 2, kind="decode", slots=slots).wait()
+        arena = e.arena(MID, SEQ)
+
+        def batch_rows(leaf, path, idx):
+            names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+            axis = 1 if names[0] == "super" else 0
+            return jnp.take(leaf, jnp.array(idx), axis=axis)
+
+        # The step wrote K/V at the cursor: the dispatched rows are dirty.
+        dirty = any(
+            bool(jnp.any(batch_rows(leaf, path, list(slots)) != 0))
+            for path, leaf in jax.tree_util.tree_leaves_with_path(arena.cache)
+        )
+        assert dirty
+        before_resets = arena.resets
+        e.free_slots(MID, SEQ, slots)
+        again = e.alloc_slots(MID, SEQ, 2)
+        assert again == slots
+        assert arena.resets == before_resets + 2
+        # ... and recycling wiped exactly those rows back to zero.
+        for path, leaf in jax.tree_util.tree_leaves_with_path(arena.cache):
+            assert bool(jnp.all(batch_rows(leaf, path, list(again)) == 0)), path
+
+
+class TestArenaDecodeEquivalence:
+    def test_prefix_rows_bit_identical_to_dense_reference(self):
+        """k live rows in the max_slots arena == the k-row dense program,
+        bit for bit (row-parallel model; dead rows masked out)."""
+        e = _engine()
+        k = 3
+        logits = e.dispatch(MID, (SEQ,), k, kind="decode").wait()
+        model = model_for(tiny(MID))
+        tok = jnp.zeros((k,), jnp.int32)
+        cur = jnp.full((k,), SEQ - 1, jnp.int32)
+        ref, _ = jax.jit(model.decode_step)(
+            e.params[MID], model.init_cache(k, SEQ), tok, cur
+        )
+        assert bool(jnp.all(logits[:k] == ref))
+
+    def test_scattered_slots_bit_identical(self):
+        """Allocator-assigned (non-contiguous) live rows match the dense
+        reference row-for-row: batch size really is data, not shape."""
+        e = _engine()
+        e.alloc_slots(MID, SEQ, 4, start_pos=SEQ - 1)
+        e.free_slots(MID, SEQ, [0, 2])  # live rows: 1, 3 (scattered)
+        logits = e.dispatch(
+            MID, (SEQ,), 2, kind="decode", slots=(1, 3)
+        ).wait()
+        model = model_for(tiny(MID))
+        tok = jnp.zeros((2,), jnp.int32)
+        cur = jnp.full((2,), SEQ - 1, jnp.int32)
+        ref, _ = jax.jit(model.decode_step)(
+            e.params[MID], model.init_cache(2, SEQ), tok, cur
+        )
+        assert bool(jnp.all(logits[jnp.array([1, 3])] == ref))
+
+    def test_donated_matches_copying(self):
+        outs = {}
+        for donate in (False, True):
+            e = _engine(donate_cache=donate)
+            hs = [
+                e.dispatch(MID, (SEQ,), 3, kind="decode") for _ in range(3)
+            ]
+            outs[donate] = [h.wait() for h in hs]
+        for a, c in zip(outs[True], outs[False]):
+            assert bool(jnp.all(a == c))
+
+
+class TestSingleProgramNoRecompiles:
+    def test_batch_sweep_zero_recompiles(self):
+        """The sequence 3 -> 5 crossed the old 4 -> 8 bucket boundary and
+        recompiled; the arena serves the whole 1..max_slots sweep (and
+        back) from ONE program."""
+        e = _engine()
+        e.execute(MID, (SEQ,), 1, kind="decode")  # warm-up: the compile
+        assert e.stats["decode_compiles"] == 1
+        e.reset_stats()
+        for b in [1, 2, 3, 4, 5, 6, 7, 8, 5, 3, 2]:
+            e.dispatch(MID, (SEQ,), b, kind="decode")
+        e.dispatch(MID, (SEQ,), 8, kind="decode").wait()
+        assert e.stats["decode_compiles"] == 0
+        # And no per-bucket cache churn: exactly one resident arena.
+        assert list(e._arenas) == [(MID, SEQ)]
+
+    def test_prefill_still_bucketed(self):
+        e = _engine()
+        for b in (1, 2, 3, 4):
+            e.execute(MID, (SEQ,), b, kind="prefill")
+        # buckets 1, 2, 4 -> three programs; batch 3 reuses bucket 4.
+        assert e.stats["prefill_compiles"] == 3
+
+
+class TestArenaDonationSurvival:
+    def test_buffer_identity_across_steps(self):
+        """With donation the SAME device buffer backs the arena across
+        steps — the in-place property the per-step O(batch) cost claim
+        rests on. (CPU jax honors aliasing; only its dispatch-overhead
+        economics differ, which is why donation is default-off on cpu.)"""
+        e = _engine(donate_cache=True, max_slots=4)
+        e.execute(MID, (SEQ,), 2, kind="decode")
+        ptr0 = jax.tree.leaves(e.arena(MID, SEQ).cache)[0].unsafe_buffer_pointer()
+        for b in (1, 3, 4, 2):
+            e.execute(MID, (SEQ,), b, kind="decode")
+        ptr1 = jax.tree.leaves(e.arena(MID, SEQ).cache)[0].unsafe_buffer_pointer()
+        assert ptr0 == ptr1
+
+    def test_backend_gated_default(self):
+        e = _engine()
+        assert e.donate_cache == (jax.default_backend() != "cpu")
+
+
+class TestCacheResetRows:
+    def test_reset_rows_and_ring_sentinel(self):
+        cfg = tiny("gemma3-12b")  # swa blocks -> ring caches with pos
+        model = model_for(cfg)
+        cache = model.init_cache(4, SEQ)
+        dirty = jax.tree.map(lambda x: x + 1, cache)
+        rows = jnp.array([True, False, True, False])
+        clean = cache_reset_rows(dirty, rows)
+
+        def names_of(path):
+            return [getattr(k, "key", getattr(k, "name", None)) for k in path]
+
+        for path, leaf in jax.tree_util.tree_leaves_with_path(clean):
+            names = names_of(path)
+            axis = 1 if names[0] == "super" else 0
+            fill = -1 if "pos" in names else 0
+            wiped = jnp.take(leaf, jnp.array([0, 2]), axis=axis)
+            kept = jnp.take(leaf, jnp.array([1, 3]), axis=axis)
+            assert bool(jnp.all(wiped == fill)), names
+            assert bool(jnp.all(kept != fill)), names
+
+
+class TestKernelActiveBitmap:
+    def test_dead_rows_skip_all_blocks_and_output_zero(self):
+        """The Pallas decode kernel's active path: dead rows match the
+        oracle's attend-to-nothing semantics (exact 0), live rows are
+        untouched relative to the no-bitmap call."""
+        from repro.kernels.decode_attention import decode_attention
+        from repro.kernels.ref import decode_attention_ref
+
+        key = jax.random.PRNGKey(7)
+        b, s, h, kv, d = 4, 32, 4, 2, 16
+        q = jax.random.normal(key, (b, 1, h, d), jnp.float32)
+        ck = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, d))
+        cv = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, d))
+        cur = jnp.array([s - 1, s - 1, 5, 0], jnp.int32)
+        kv_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        valid = jnp.ones((b, s), bool)
+        active = jnp.array([True, True, False, False])
+        out = decode_attention(
+            q, ck, cv, cur, kv_pos, valid, active, interpret=True
+        )
+        exp = decode_attention_ref(q, ck, cv, cur, kv_pos, valid, active)
+        assert float(jnp.abs(out - exp).max()) < 1e-5
+        assert bool(jnp.all(out[2:] == 0.0))
+        # Live rows bit-match the bitmap-free call (active only masks).
+        plain = decode_attention(q, ck, cv, cur, kv_pos, valid, interpret=True)
+        assert bool(jnp.all(out[:2] == plain[:2]))
+
+
+class TestFlatDecodeWCET:
+    def test_flat_entry_answers_every_batch(self):
+        t = ProfileTable()
+        t.record_flat("m", (SEQ,), 0.004, max_slots=8)
+        assert t.has("m", (SEQ,))
+        assert t.wcet("m", (SEQ,), 1) == t.wcet("m", (SEQ,), 8) == 0.004
+        assert t.wcet_optimistic("m", (SEQ,), 3) == 0.004
+        assert t.max_profiled_batch("m", (SEQ,)) == 8
+        assert t.wcet("m", (SEQ,), 0) == 0.0
+        # Beyond the arena there is NO program: infinity, so admission
+        # rejects instead of the engine crashing at dispatch time.
+        assert t.wcet("m", (SEQ,), 9) == float("inf")
+        assert t.wcet_optimistic("m", (SEQ,), 9) == float("inf")
+
+    def test_admission_rejects_unservable_batches(self):
+        """A request stream that would batch more frames per DisBatcher
+        window than max_slots is rejected up front (phase 1 sees the inf
+        utilization) — mid-serving it would be an engine ValueError."""
+        from repro.core import Category, DeepRT, EventLoop, Request
+
+        t = ProfileTable()
+        t.record_flat("m", (SEQ,), 0.0001, max_slots=4)
+        sched = DeepRT(t, loop=EventLoop())
+        # window = 0.5 * 1.0 deadline = 0.5s; period 0.05 -> ~10 frames
+        # per window > 4 slots.
+        too_dense = Request(
+            category=Category("m", (SEQ,)), period=0.05,
+            relative_deadline=1.0, n_frames=30,
+        )
+        res = sched.submit_request(too_dense)
+        assert not res.admitted
+        # A stream whose windows stay within the arena is admitted.
+        sched2 = DeepRT(t, loop=EventLoop())
+        ok = Request(
+            category=Category("m", (SEQ,)), period=0.2,
+            relative_deadline=1.0, n_frames=10,
+        )
+        assert sched2.submit_request(ok).admitted
+
+    def test_flat_entry_json_roundtrip_and_scaling(self):
+        t = ProfileTable()
+        t.record_flat("m", (SEQ,), 0.004, max_slots=8)
+        t.record("m", (32,), 2, 0.01)
+        t2 = ProfileTable.from_json(t.to_json())
+        assert t2.wcet("m", (SEQ,), 5) == 0.004
+        assert t2.wcet("m", (32,), 2) == 0.01
+        assert t2.scaled(2.0).wcet("m", (SEQ,), 5) == pytest.approx(0.008)
+
+    def test_arena_slots_sizing(self):
+        assert arena_slots(1) == 1
+        assert arena_slots(5) == 8
+        assert arena_slots(8) == 8
+        with pytest.raises(ValueError):
+            arena_slots(0)
+
+    def test_bridge_profiles_decode_flat(self):
+        from repro.serving.batcher_bridge import profile_engine
+
+        e = _engine(max_slots=4)
+        table = profile_engine(
+            e, [(MID, (SEQ,), "decode")], batch_sizes=(1, 2, 4), runs=2
+        )
+        key = (MID, (SEQ,))
+        assert key in table.flat_entries
+        assert table.flat_entries[key][0] == 4
+        assert key not in table.entries  # no leftover bucketed curve
+        # One program profiled == one program served.
+        assert e.stats["decode_compiles"] == 1
+
+    def test_bridge_rejects_dual_kind_category(self):
+        """WCET keys carry no kind: profiling one (model, shape) as both
+        prefill and decode would let the flat decode entry shadow the
+        prefill curve — refused loudly."""
+        from repro.serving.batcher_bridge import profile_engine
+
+        e = _engine(max_slots=4)
+        with pytest.raises(ValueError, match="both"):
+            profile_engine(
+                e,
+                [(MID, (SEQ,), "prefill"), (MID, (SEQ,), "decode")],
+                batch_sizes=(1, 2),
+                runs=1,
+            )
+
+    def test_live_metrics_charge_arena_rows_for_decode(self):
+        """Metrics.bucket_rows must reflect the rows the engine actually
+        launched: max_slots per decode job, not bucket(batch)."""
+        from repro.core import Category, Request
+        from repro.serving.batcher_bridge import build_live_scheduler
+
+        e = _engine(max_slots=4)
+        sched, engine, table = build_live_scheduler(
+            {MID: tiny(MID)}, [(MID, (SEQ,), "decode")],
+            batch_sizes=(1, 2, 4), engine=e,
+        )
+        w = table.wcet(MID, (SEQ,), 1)
+        # Window = 0.5 * deadline = 0.125s; period 0.05 -> ~2 frames per
+        # window, comfortably within the 4-slot arena (denser streams are
+        # rejected by the flat table's inf beyond max_slots).
+        req = Request(
+            category=Category(MID, (SEQ,)), period=max(w * 4, 0.05),
+            relative_deadline=max(w * 24, 0.25), n_frames=4,
+        )
+        assert sched.submit_request(req).admitted
+        m = sched.run()
+        assert m.completed_frames == 4
+        assert m.job_count > 0
+        assert m.bucket_rows == m.job_count * e.max_slots
+        # Non-RT requests bypass admission; their batch cap shrank to the
+        # arena so they can never form an unservable decode batch.
+        assert sched.nonrt_batch_cap == e.max_slots
