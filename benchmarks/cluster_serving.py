@@ -1,0 +1,204 @@
+"""Cluster serving benchmark: live multi-slice DeepRT with per-slice
+slot arenas and a slice-failure replay.
+
+Scenario (all on real compiled programs, one shared WallClock):
+
+1. build a live cluster (``build_live_cluster``): N slices, each with
+   its OWN InferenceEngine (resident decode arena, per-slice
+   ``max_slots``), AsyncDevice, and profiled WCET table;
+2. place a mixed RT workload (decode streams + prefill streams) through
+   the utilization-ordered placement + admission + arena-lease path;
+3. mid-run, FAIL one slice: its device closes, its engine freezes, and
+   every in-flight request's remaining tail re-admits onto surviving
+   slices' arenas (re-leased rows — arenas are never re-created);
+4. drain to completion.
+
+Acceptance bars (asserted, also in ``--smoke``):
+
+- ZERO decode recompiles on steady slices across the whole replay —
+  failover traffic lands on the survivors' one resident program;
+- every request placed on the dead slice is re-admitted or explicitly
+  shed (accounting conserved — nothing silently dropped);
+- aggregate throughput is finite and positive (NaN guard) and the miss
+  rate stays bounded below 1.
+
+Writes ``BENCH_cluster_serving.json`` at the repo root (plus the usual
+CSV under benchmarks/results/) so successive PRs can track the numbers.
+
+    PYTHONPATH=src python -m benchmarks.cluster_serving [--smoke]
+
+``--smoke`` (CI): 2 tiny slices, short streams, no root-JSON rewrite —
+a bit-rot guard for the live cluster path, not a timing source.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import check_finite, write_csv
+from repro.configs.registry import tiny
+from repro.core import Category, Request
+from repro.serving.batcher_bridge import build_live_cluster
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MID = "granite-3-2b"
+
+
+def main(smoke: bool = False) -> List[str]:
+    if smoke:
+        n_slices, seq_pre, seq_dec = 2, 16, 8
+        batch_sizes, nonrt_cap = (1, 2), 1
+        n_decode, n_prefill, frames = 3, 2, 8
+        fail_after = 0.5
+    else:
+        n_slices, seq_pre, seq_dec = 3, 32, 16
+        batch_sizes, nonrt_cap = (1, 2, 4, 8), 8
+        n_decode, n_prefill, frames = 6, 3, 20
+        fail_after = 1.0
+
+    configs = {MID: tiny(MID)}
+    cats = [(MID, (seq_pre,), "prefill"), (MID, (seq_dec,), "decode")]
+    t0 = time.perf_counter()
+    cluster, slices = build_live_cluster(
+        configs,
+        cats,
+        slice_names=tuple(f"slice{i}" for i in range(n_slices)),
+        batch_sizes=batch_sizes,
+        profile_runs=3 if smoke else 5,
+        nonrt_cap=nonrt_cap,
+    )
+    build_s = time.perf_counter() - t0
+
+    reqs = [
+        Request(category=Category(MID, (seq_dec,)), period=0.2,
+                relative_deadline=0.4, n_frames=frames)
+        for _ in range(n_decode)
+    ] + [
+        Request(category=Category(MID, (seq_pre,)), period=0.1,
+                relative_deadline=0.3, n_frames=frames)
+        for _ in range(n_prefill)
+    ]
+    placed = sum(cluster.submit_request(r) for r in reqs)
+
+    by_slice: Dict[str, int] = {name: 0 for name in slices}
+    for name in cluster.placement.values():
+        by_slice[name] += 1
+
+    t_serve = time.perf_counter()
+    cluster.run(until=cluster.loop.now + fail_after)
+    # Fail the most loaded slice mid-decode (deterministic tie: name;
+    # placement only changes at fail_slice, so by_slice is still current).
+    dead = max(by_slice, key=lambda n: (by_slice[n], n))
+    victims = [rid for rid, n in cluster.placement.items() if n == dead]
+    # Guard the replay against becoming vacuous: at failure time at least
+    # one victim must still be mid-stream (placement also retains fully
+    # arrived requests, so victims alone proves nothing).
+    now = cluster.loop.now
+    inflight = [rid for rid in victims if cluster.requests[rid].end_time > now]
+    assert inflight, (
+        "failure replay needs in-flight requests on the dead slice; "
+        f"streams ended before fail_after={fail_after}"
+    )
+    completed_at_failure = cluster.aggregate_metrics()["completed_frames"]
+    lost = cluster.fail_slice(dead)
+    cluster.run()
+    serve_s = time.perf_counter() - t_serve
+
+    agg = cluster.aggregate_metrics()
+    throughput = agg["completed_frames"] / serve_s if serve_s > 0 else 0.0
+    survivors = [n for n in slices if n != dead]
+    compiles = {
+        name: {
+            "decode": slices[name].engine.stats["decode_compiles"],
+            "prefill": slices[name].engine.stats["prefill_compiles"],
+        }
+        for name in slices
+    }
+    rerouted = sum(1 for t in cluster.failover_map.values() if t is not None)
+    shed = sum(1 for t in cluster.failover_map.values() if t is None)
+
+    result = {
+        "slices": n_slices,
+        "build_seconds": build_s,
+        "placed_requests": placed,
+        "placement": by_slice,
+        "failed_slice": dead,
+        "failover": {
+            "victims": len(victims),
+            "rerouted": rerouted,
+            "shed": shed,
+            "finished_with_slice": len(cluster.finished_with_slice),
+        },
+        "completed_frames": agg["completed_frames"],
+        "completed_at_failure": completed_at_failure,
+        "miss_rate": agg["miss_rate"],
+        "throughput_frames_per_sec": throughput,
+        "compiles_after_warmup": compiles,
+        "survivor_arena_allocs": {
+            name: slices[name].engine.arena(MID, seq_dec).allocs
+            for name in survivors
+        },
+    }
+
+    # Bit-rot guards (what --smoke exists for).
+    assert placed >= 2, result
+    assert rerouted + shed >= 1, result  # failover actually displaced work
+    check_finite("cluster throughput", throughput)
+    assert agg["miss_rate"] < 1.0, result
+    # Accounting conserved: every victim re-admitted, shed, or finished.
+    accounted = rerouted + shed + len(cluster.finished_with_slice)
+    assert accounted == len(victims), result
+    assert shed == len(lost), result
+    # THE acceptance bar: zero decode recompiles on steady slices across
+    # the failure replay — rerouted decode traffic hit the survivors' one
+    # resident program, batch size stayed data.
+    for name in survivors:
+        assert compiles[name]["decode"] == 0, (name, result)
+    assert agg["completed_frames"] > completed_at_failure, result
+
+    if not smoke:
+        with open(os.path.join(REPO_ROOT, "BENCH_cluster_serving.json"), "w") as f:
+            json.dump(result, f, indent=1)
+        write_csv(
+            "cluster_serving",
+            ["metric", "value"],
+            [
+                ["slices", n_slices],
+                ["placed_requests", placed],
+                ["victims", len(victims)],
+                ["rerouted", rerouted],
+                ["shed", shed],
+                ["miss_rate", agg["miss_rate"]],
+                ["throughput_frames_per_sec", throughput],
+                ["survivor_decode_recompiles",
+                 sum(compiles[n]["decode"] for n in survivors)],
+            ],
+        )
+
+    lines = [
+        f"cluster_serving,slices,{n_slices}",
+        f"cluster_serving,placed_requests,{placed}/{len(reqs)}",
+        f"cluster_serving,failed_slice,{dead} ({len(victims)} in-flight)",
+        f"cluster_serving,failover,rerouted {rerouted} / shed {shed}",
+        f"cluster_serving,completed_frames,{agg['completed_frames']}",
+        f"cluster_serving,miss_rate,{agg['miss_rate']:.3f}",
+        f"cluster_serving,throughput_fps,{throughput:.1f}",
+        f"cluster_serving,survivor_decode_recompiles,"
+        f"{sum(compiles[n]['decode'] for n in survivors)}",
+    ]
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="2 tiny slices, short streams, no JSON rewrite (CI bit-rot guard)",
+    )
+    args = ap.parse_args()
+    for line in main(smoke=args.smoke):
+        print(line)

@@ -9,6 +9,7 @@ paper's methodology.
 from __future__ import annotations
 
 import csv
+import math
 import os
 import random
 from typing import Dict, List, Tuple
@@ -32,6 +33,13 @@ PAPER_BATCH1 = {
 BATCH_SLOPE = 0.35
 
 RESOLUTIONS = [(3, 224, 224), (3, 240, 352), (3, 480, 854), (3, 1080, 1920)]
+
+
+def check_finite(tag: str, value: float) -> None:
+    """NaN/zero/negative guard for benchmark headline numbers (what the
+    CI --smoke arms exist to catch)."""
+    if not math.isfinite(value) or value <= 0:
+        raise AssertionError(f"{tag} is NaN/zero/negative: {value}")
 
 
 def pixel_scale(shape: Tuple[int, ...]) -> float:

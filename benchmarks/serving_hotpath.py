@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 import os
 import statistics
 import time
@@ -46,6 +45,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from benchmarks.common import check_finite as _check_finite
 from benchmarks.common import write_csv
 from repro.configs.registry import tiny
 from repro.core import Category, Request
@@ -222,11 +222,6 @@ def _bucket_transition(
             compiles_after_warmup=legacy.compiles - warm_compiles,
         ),
     }
-
-
-def _check_finite(tag: str, value: float) -> None:
-    if not math.isfinite(value) or value <= 0:
-        raise AssertionError(f"{tag} is NaN/zero/negative: {value}")
 
 
 def main(smoke: bool = False) -> List[str]:

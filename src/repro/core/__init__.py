@@ -5,11 +5,17 @@ from repro.core.admission import (
     AdmissionResult,
     CategorySnapshot,
     SystemState,
+    phase1_from_scheduler,
     snapshot_from_scheduler,
 )
 from repro.core.baselines import AIMD, BATCH, BATCHDelay, SEDF
-from repro.core.bucketing import bucket, bucket_sizes, padding_fraction
-from repro.core.cluster import ClusterScheduler, Slice, SliceSpec
+from repro.core.bucketing import (
+    bucket,
+    bucket_sizes,
+    padding_fraction,
+    slice_arena_slots,
+)
+from repro.core.cluster import ClusterScheduler, LiveSlice, Slice, SliceSpec
 from repro.core.disbatcher import WINDOW_FRACTION, DisBatcher
 from repro.core.edf import DeadlineQueue, EDFWorker
 from repro.core.profiler import (
@@ -36,6 +42,7 @@ __all__ = [
     "AdmissionResult",
     "CategorySnapshot",
     "SystemState",
+    "phase1_from_scheduler",
     "snapshot_from_scheduler",
     "AIMD",
     "BATCH",
@@ -44,7 +51,9 @@ __all__ = [
     "bucket",
     "bucket_sizes",
     "padding_fraction",
+    "slice_arena_slots",
     "ClusterScheduler",
+    "LiveSlice",
     "Slice",
     "SliceSpec",
     "WINDOW_FRACTION",

@@ -242,6 +242,24 @@ class AdmissionControl:
         )
 
 
+def phase1_from_scheduler(sched) -> float:
+    """Current Phase-1 utilization of a live scheduler (duck-typed: any
+    object with ``loop``/``disbatcher``/``worker``/``device``/``table``/
+    ``admission`` — i.e. a ``DeepRT``). The cluster placement loop ranks
+    slices by this value; it is also what the per-slice utilization-bound
+    tests read, so it must see EXACTLY the state ``submit_request``'s
+    admission test would see (same snapshot code, no pending fold-in).
+    """
+    state = snapshot_from_scheduler(
+        now=sched.loop.now,
+        disbatcher=sched.disbatcher,
+        queued_jobs=sched.worker.queue.snapshot(),
+        device_free_at=sched.device.busy_until or sched.loop.now,
+        table=sched.table,
+    )
+    return sched.admission.phase1_utilization(state.categories)
+
+
 def snapshot_from_scheduler(
     now: float,
     disbatcher: DisBatcher,

@@ -16,11 +16,12 @@ guarantee: the imitator's timeline would be faster than reality):
   (``ProfileTable.record_flat``) instead of a per-bucket curve.
   ``arena_slots`` is the one place the arena's row count is derived.
 
-Keep this module dependency-free; it is imported by the engine, the
-profiler, and the admission path.
+Keep this module dependency-free (stdlib only); it is imported by the
+engine, the profiler, and the admission path.
 """
 from __future__ import annotations
 
+import math
 from typing import List
 
 
@@ -65,6 +66,30 @@ def arena_slots(max_batch: int) -> int:
     if max_batch <= 0:
         raise ValueError(f"arena needs >= 1 slot, got max_batch={max_batch}")
     return bucket(max_batch)
+
+
+def slice_arena_slots(
+    max_batch: int, utilization_bound: float = 1.0, min_slots: int = 1
+) -> int:
+    """Row count of ONE device slice's resident decode arena.
+
+    A cluster partitions admissible load across slices by giving each a
+    Phase-1 utilization bound β <= 1 (admission on that slice rejects
+    anything pushing its Ũ past β). The frames-per-window bound scales
+    the same way — ``n_g = floor(sum_m W_g / p_m)`` is what the
+    utilization formula multiplies by E/W — so a slice carrying a β
+    share of the load needs only ``ceil(β * max_batch)`` rows before
+    rounding to the arena bucket. β = 1 degenerates to ``arena_slots``
+    (the single-device rule). ``min_slots`` floors the result so a
+    thin slice can still host at least one decode stream.
+    """
+    if not 0.0 < utilization_bound <= 1.0:
+        raise ValueError(
+            f"utilization_bound must be in (0, 1], got {utilization_bound}"
+        )
+    if min_slots < 1:
+        raise ValueError(f"min_slots must be >= 1, got {min_slots}")
+    return arena_slots(max(min_slots, math.ceil(utilization_bound * max_batch)))
 
 
 def padding_fraction(true_batch: int, bucket_batch: int = 0) -> float:

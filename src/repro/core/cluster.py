@@ -7,9 +7,9 @@ design is per-accelerator, so it shards naturally. This layer adds what a
 1000-node deployment needs on top:
 
 - placement: route a new request to the slice with the lowest Phase-1
-  utilization that can host its category (capability = profiled model);
-  admission on the chosen slice decides finally (spill to the next
-  candidate on rejection);
+  utilization that can host its category (capability = profiled model)
+  AND has a free decode-arena row for it; admission on the chosen slice
+  decides finally (spill to the next candidate on rejection);
 - fault tolerance: on slice failure every in-flight request of that slice
   is *re-admitted* elsewhere — the paper's admission test doubles as the
   recovery policy, so recovery never overloads surviving slices;
@@ -20,11 +20,30 @@ design is per-accelerator, so it shards naturally. This layer adds what a
   precisely straggler mitigation at this level;
 - elastic scale-up: adding a slice makes its capacity available to the
   placement loop immediately.
+
+Two slice flavors behind one interface:
+
+- ``Slice``: simulation — its DeepRT runs on the cluster's (virtual)
+  event loop against a ``SequentialDevice`` with sampled exec times.
+- ``LiveSlice``: real serving — its DeepRT owns a compiled
+  ``InferenceEngine`` (per-slice resident KV arena, per-slice
+  ``max_slots`` from ``bucketing.slice_arena_slots`` under the slice's
+  Phase-1 utilization bound), an ``AsyncDevice``, and a per-slice
+  profiled WCET table, all behind the shared device contract
+  (ROADMAP architecture note). Decode requests LEASE an arena row on
+  their slice at admission and release it when their last frame
+  completes; ``fail_slice`` fail-stops the slice (device closed, engine
+  frozen — its arena rows are never touched again) and re-admits the
+  in-flight tails onto surviving slices' arenas by re-leasing rows
+  there, never by re-creating arenas. ``serving.batcher_bridge.
+  build_live_cluster`` is the factory.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.profiler import ProfileTable
 from repro.core.request import Request
@@ -37,16 +56,25 @@ class SliceSpec:
     name: str
     table: ProfileTable  # per-slice WCET table (mesh-dependent)
     models: Optional[Sequence[str]] = None  # None = hosts any profiled model
+    # Phase-1 utilization ceiling this slice's admission enforces; the
+    # live factory also sizes the slice's decode arena from it
+    # (``bucketing.slice_arena_slots``).
+    utilization_bound: float = 1.0
 
 
 class Slice:
     def __init__(self, spec: SliceSpec, loop: EventLoop, execution=None,
-                 adaptation_enabled: bool = True):
+                 adaptation_enabled: bool = True, scheduler: Optional[DeepRT] = None):
+        """``scheduler=None`` (simulation) builds a DeepRT on the shared
+        loop; ``LiveSlice`` passes a pre-wired live scheduler instead."""
         self.spec = spec
-        self.scheduler = DeepRT(
-            spec.table, loop=loop, execution=execution,
-            adaptation_enabled=adaptation_enabled,
-        )
+        if scheduler is None:
+            scheduler = DeepRT(
+                spec.table, loop=loop, execution=execution,
+                adaptation_enabled=adaptation_enabled,
+                utilization_bound=spec.utilization_bound,
+            )
+        self.scheduler = scheduler
         self.alive = True
         self.slow_factor = 1.0
 
@@ -60,18 +88,117 @@ class Slice:
         )
 
     def utilization(self) -> float:
-        sched = self.scheduler
-        state_cats = []
-        from repro.core.admission import snapshot_from_scheduler
+        return self.scheduler.utilization()
 
-        state = snapshot_from_scheduler(
-            now=sched.loop.now,
-            disbatcher=sched.disbatcher,
-            queued_jobs=sched.worker.queue.snapshot(),
-            device_free_at=sched.device.busy_until or sched.loop.now,
-            table=sched.table,
-        )
-        return sched.admission.phase1_utilization(state.categories)
+    # -- capacity leases (no-ops in simulation; LiveSlice overrides) ------
+    def can_lease(self, request: Request) -> bool:
+        return True
+
+    def lease(self, request: Request) -> None:
+        pass
+
+    def release(self, request_id: int) -> None:
+        pass
+
+    def shutdown(self) -> None:
+        """Fail-stop: stop hosting new requests and close the device
+        (both contract implementations swallow any in-flight completion
+        and report not-idle forever, so the dead scheduler's queued jobs
+        never start — simulation and live fail identically). LiveSlice
+        extends this to freeze its engine."""
+        self.alive = False
+        self.scheduler.device.close()
+
+
+class LiveSlice(Slice):
+    """A slice whose DeepRT executes real compiled programs.
+
+    Owns the full live stack: ``engine`` (this slice's resident KV
+    arenas + compiled steps), ``device`` (its AsyncDevice), and — via
+    ``spec.table`` — its own profiled WCET table. ``kinds`` maps
+    (model_id, shape_key) -> "prefill" | "decode" (the bridge's category
+    list), so the slice knows which requests are decode streams that
+    occupy an arena row for their lifetime.
+    """
+
+    def __init__(self, spec: SliceSpec, scheduler: DeepRT, engine,
+                 kinds: Dict[Tuple[str, Tuple[int, ...]], str]):
+        super().__init__(spec, loop=scheduler.loop, scheduler=scheduler)
+        self.engine = engine
+        # The slice's AsyncDevice IS the scheduler's device — derived,
+        # not a second parameter, so shutdown can never close one object
+        # while metrics readers watch another.
+        self.device = scheduler.device
+        self.kinds = dict(kinds)
+        # request_id -> (model_id, seq, arena row ids) for decode streams:
+        self.leases: Dict[int, Tuple[str, int, Tuple[int, ...]]] = {}
+        self._frames_left: Dict[int, int] = {}
+        # Release rows when a request's last frame completes, without
+        # stealing the adaptation module's completion hook.
+        prev = scheduler.worker.on_job_complete
+
+        def _chained(job, actual, _prev=prev):
+            if _prev is not None:
+                _prev(job, actual)
+            self._on_job_complete(job)
+
+        scheduler.worker.on_job_complete = _chained
+
+    def _decode_key(self, request: Request) -> Optional[Tuple[str, int]]:
+        cat = request.category
+        key = (cat.model_id, tuple(cat.shape_key))
+        if self.kinds.get(key) != "decode":
+            return None
+        return cat.model_id, cat.shape_key[0]
+
+    def can_lease(self, request: Request) -> bool:
+        key = self._decode_key(request)
+        if key is None:
+            return True  # prefill / unknown: no resident row needed
+        return len(self.engine.arena(*key).free) >= 1
+
+    def lease(self, request: Request) -> None:
+        """Pin one arena row for an admitted decode stream (one sequence
+        = one resident KV row). Caller must have checked ``can_lease``;
+        the allocator raises on exhaustion rather than reshaping."""
+        key = self._decode_key(request)
+        if key is None:
+            return
+        mid, seq = key
+        slots = self.engine.alloc_slots(mid, seq, 1)
+        self.leases[request.request_id] = (mid, seq, slots)
+        self._frames_left[request.request_id] = request.n_frames
+
+    def release(self, request_id: int) -> None:
+        lease = self.leases.pop(request_id, None)
+        self._frames_left.pop(request_id, None)
+        if lease is None:
+            return
+        if not self.alive:
+            # Dead slice: its engine is frozen and its arena rows must
+            # never be touched again — the lease record is dropped, the
+            # rows stay as the failure left them.
+            return
+        mid, seq, slots = lease
+        self.engine.free_slots(mid, seq, slots)
+
+    def _on_job_complete(self, job) -> None:
+        for frame in job.frames:
+            rid = frame.request_id
+            left = self._frames_left.get(rid)
+            if left is None:
+                continue
+            if left <= 1:
+                self.release(rid)
+            else:
+                self._frames_left[rid] = left - 1
+
+    def shutdown(self) -> None:
+        """Fail-stop the live stack: the device is closed by the base
+        shutdown; the engine freezes so any later touch of this slice's
+        arenas raises."""
+        super().shutdown()
+        self.engine.freeze()
 
 
 class ClusterScheduler:
@@ -84,11 +211,29 @@ class ClusterScheduler:
         self.requests: Dict[int, Request] = {}
         self.dropped: List[Request] = []
         self.reroutes = 0
+        # Placement audit trail: (request_id, ((slice, utilization), ...)
+        # in try order, chosen slice or None). The spill-order tests (and
+        # any postmortem of a mis-placed request) read this. Bounded: a
+        # live cluster submits for the process lifetime, so an unbounded
+        # per-submission log would be a slow leak.
+        self.placement_attempts: Deque[
+            Tuple[int, Tuple[Tuple[str, float], ...], Optional[str]]
+        ] = deque(maxlen=4096)
+        # Failover audit: displaced request -> re-admitted tail request id
+        # (None = shed). Requests whose frames had all arrived when their
+        # slice died have nothing to re-admit and land in
+        # ``finished_with_slice`` instead — between the three records,
+        # no request placed on a failed slice goes unaccounted.
+        self.failover_map: Dict[int, Optional[int]] = {}
+        self.finished_with_slice: List[int] = []
 
     # -- elasticity ------------------------------------------------------
     def add_slice(self, spec: SliceSpec) -> Slice:
-        sl = Slice(spec, self.loop, execution=self.execution)
-        self.slices[spec.name] = sl
+        return self.register(Slice(spec, self.loop, execution=self.execution))
+
+    def register(self, sl: Slice) -> Slice:
+        """Add a pre-built slice (the live factory's entry point)."""
+        self.slices[sl.spec.name] = sl
         return sl
 
     def mark_slow(self, name: str, factor: float) -> None:
@@ -100,25 +245,38 @@ class ClusterScheduler:
         sl.scheduler.admission.table = sl.scheduler.table
 
     def fail_slice(self, name: str) -> List[Request]:
-        """Kill a slice; re-admit its unfinished requests elsewhere.
+        """Fail-stop a slice; re-admit its unfinished requests elsewhere.
 
-        Returns requests that could not be re-placed (shed load — in a
-        soft-RT system overload sheds rather than cascades)."""
+        Live slices are shut down first (device closed, engine frozen),
+        so the dead slice's arena rows are never touched again; each
+        displaced request's remaining tail is re-admitted through the
+        normal placement + admission + lease path, which allocates rows
+        on SURVIVING slices' resident arenas. Returns requests that
+        could not be re-placed (shed load — in a soft-RT system overload
+        sheds rather than cascades)."""
         sl = self.slices[name]
-        sl.alive = False
-        displaced = []
+        sl.shutdown()
+        displaced: List[Tuple[int, Request]] = []
         now = self.loop.now
         for rid, placed_on in list(self.placement.items()):
             if placed_on != name:
                 continue
             req = self.requests[rid]
-            if req.end_time <= now:
-                continue  # already fully arrived; frames lost with the slice
             del self.placement[rid]
-            remaining = req.n_frames - max(
-                0, int((now - req.start_time) / req.period) + 1
-            )
+            if req.end_time <= now:
+                # Already fully arrived; in-flight frames lost with the
+                # slice, nothing left to re-admit.
+                self.finished_with_slice.append(rid)
+                continue
+            # Frames with arrival <= now are lost with the slice. floor,
+            # not int(): a request whose start is still in the future
+            # (e.g. a tail re-admitted by an earlier failover) has a
+            # negative elapsed fraction, and int()'s truncation toward
+            # zero would count one phantom arrived frame.
+            arrived = math.floor((now - req.start_time) / req.period) + 1
+            remaining = req.n_frames - max(0, arrived)
             if remaining <= 0:
+                self.finished_with_slice.append(rid)
                 continue
             # Re-admit the remaining tail as a fresh request.
             tail = Request(
@@ -128,25 +286,41 @@ class ClusterScheduler:
                 n_frames=remaining,
                 start_time=now + req.period,
             )
-            displaced.append(tail)
+            displaced.append((rid, tail))
         lost = []
-        for req in displaced:
-            if not self.submit_request(req):
-                lost.append(req)
-            else:
+        for rid, tail in displaced:
+            if self.submit_request(tail):
+                self.failover_map[rid] = tail.request_id
                 self.reroutes += 1
+            else:
+                self.failover_map[rid] = None
+                lost.append(tail)
         return lost
 
     # -- placement + admission --------------------------------------------
     def submit_request(self, request: Request) -> bool:
-        candidates = [s for s in self.slices.values() if s.hosts(request)]
-        candidates.sort(key=lambda s: s.utilization())
-        for sl in candidates:
+        ranked = sorted(
+            ((sl.utilization(), sl.spec.name, sl)
+             for sl in self.slices.values() if sl.hosts(request)),
+            key=lambda t: (t[0], t[1]),
+        )
+        chosen: Optional[str] = None
+        for _u, _name, sl in ranked:
+            if not sl.can_lease(request):
+                continue  # no free arena row for a new decode stream: spill
             result = sl.scheduler.submit_request(request)
             if result.admitted:
+                sl.lease(request)
                 self.placement[request.request_id] = sl.spec.name
                 self.requests[request.request_id] = request
-                return True
+                chosen = sl.spec.name
+                break
+        self.placement_attempts.append(
+            (request.request_id,
+             tuple((name, u) for u, name, _ in ranked), chosen)
+        )
+        if chosen is not None:
+            return True
         self.dropped.append(request)
         return False
 

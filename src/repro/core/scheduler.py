@@ -23,7 +23,12 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.adaptation import AdaptationModule, default_shrink
-from repro.core.admission import AdmissionControl, AdmissionResult, snapshot_from_scheduler
+from repro.core.admission import (
+    AdmissionControl,
+    AdmissionResult,
+    phase1_from_scheduler,
+    snapshot_from_scheduler,
+)
 from repro.core.disbatcher import DisBatcher
 from repro.core.edf import EDFWorker
 from repro.core.profiler import ProfileTable
@@ -130,6 +135,12 @@ class DeepRT:
         return self.disbatcher.flush_early(
             wcet_fn=lambda cat, shape, b: self.table.wcet(cat.model_id, shape, b)
         )
+
+    def utilization(self) -> float:
+        """Current Phase-1 utilization — what the cluster placement loop
+        ranks slices by (lowest first) and what its per-slice
+        utilization-bound invariant is asserted against."""
+        return phase1_from_scheduler(self)
 
     # ----- client API ------------------------------------------------------
     def submit_request(self, request: Request) -> AdmissionResult:

@@ -223,17 +223,35 @@ class SequentialDevice:
         self.loop = loop
         self.on_idle = on_idle
         self._busy_until: Optional[float] = None
+        self._closed = False
         self.busy_time = 0.0  # total seconds spent executing
         self.resident_bytes = 0.0  # live batch buffers (Fig 6 benchmark)
         self.peak_bytes = 0.0
 
     @property
     def idle(self) -> bool:
-        return self._busy_until is None
+        # A closed device (its slice failed) is never idle — see
+        # AsyncDevice.idle for the rationale; both contract
+        # implementations fail-stop identically.
+        return not self._closed and self._busy_until is None
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     @property
     def busy_until(self) -> Optional[float]:
         return self._busy_until
+
+    def close(self) -> None:
+        """Fail-stop (idempotent): refuse new submissions, report
+        not-idle forever, swallow the in-flight completion if any. The
+        cluster's ``fail_slice`` closes the dead slice's device so its
+        remaining frames are lost with the slice in simulation exactly
+        as they are live — otherwise the sim slice would keep serving
+        the frames its re-admitted tails also serve, double-counting
+        them in the aggregate metrics."""
+        self._closed = True
 
     def submit(
         self,
@@ -242,6 +260,8 @@ class SequentialDevice:
         on_complete: Callable[[object, float], None],
         job_bytes: float = 0.0,
     ) -> None:
+        if self._closed:
+            raise RuntimeError("SequentialDevice is closed (slice failed)")
         if not self.idle:
             raise RuntimeError("SequentialDevice is busy; EDF worker bug")
         start = self.loop.now
@@ -253,6 +273,8 @@ class SequentialDevice:
         def _done() -> None:
             self._busy_until = None
             self.resident_bytes -= job_bytes
+            if self._closed:
+                return  # slice died mid-job: frames lost with the slice
             on_complete(job, self.loop.now)
             if self.on_idle is not None:
                 self.on_idle()

@@ -52,6 +52,7 @@ class AsyncDevice:
         self.dispatch_fn = dispatch_fn
         self.on_idle = on_idle
         self._busy_until: Optional[float] = None
+        self._closed = False
         self.last_error: Optional[Exception] = None
         self.busy_time = 0.0  # total measured seconds executing
         self.resident_bytes = 0.0
@@ -64,7 +65,15 @@ class AsyncDevice:
 
     @property
     def idle(self) -> bool:
-        return self._busy_until is None
+        # A closed device (its slice failed) is never idle: the EDF
+        # worker's submit-only-when-idle discipline then guarantees no
+        # further dispatch without any scheduler-side special-casing —
+        # the dead slice's queued jobs simply never start.
+        return not self._closed and self._busy_until is None
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     @property
     def busy_until(self) -> Optional[float]:
@@ -80,6 +89,8 @@ class AsyncDevice:
         """Non-blocking: async-dispatch the job, hand the handle to the
         waiter, return to the loop. ``exec_time`` is the estimate used
         for ``busy_until`` only (contract: simulator.SequentialDevice)."""
+        if self._closed:
+            raise RuntimeError("AsyncDevice is closed (slice failed)")
         if not self.idle:
             raise RuntimeError("AsyncDevice is busy; EDF worker bug")
         start = self.loop.now
@@ -119,6 +130,13 @@ class AsyncDevice:
         self.busy_time += now - start
         self._busy_until = None
         self.resident_bytes -= job_bytes
+        if self._closed:
+            # The slice died while this job was in flight: its frames are
+            # lost with the slice (the cluster re-admits the request's
+            # remaining tail elsewhere). Reporting the completion would
+            # count dead frames as served and re-enter EDF dispatch on a
+            # device that can no longer execute.
+            return
         if err is not None:
             # A failed execution must NOT be reported as a completed job
             # (frames would count as deadline-met with no output). Device
@@ -130,5 +148,12 @@ class AsyncDevice:
             self.on_idle()
 
     def close(self) -> None:
-        """Stop the waiter thread (idempotent; optional — it's a daemon)."""
+        """Fail-stop the device (idempotent): refuse new submissions,
+        report not-idle forever, swallow the in-flight completion if any,
+        and stop the waiter thread once it drains. The live cluster's
+        ``fail_slice`` calls this before re-admitting the slice's
+        requests elsewhere."""
+        if self._closed:
+            return
+        self._closed = True
         self._inbox.put(None)

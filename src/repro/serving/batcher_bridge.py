@@ -24,10 +24,17 @@ the single program that serves all batch sizes) via
 ``ProfileTable.record_flat``. The engine's arena is sized with the
 shared ``bucketing.arena_slots`` so the profiled program IS the served
 program.
+
+``build_live_cluster`` generalizes this to a pod: N slices on ONE
+WallClock, each with its own engine (per-slice arena sized by
+``bucketing.slice_arena_slots`` under that slice's Phase-1 utilization
+bound), its own AsyncDevice, and its own profiled table, registered
+into a ``ClusterScheduler`` that does placement, spill, per-request
+arena-row leases, and failover re-admission (``core/cluster.py``).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional, Tuple
+from typing import Dict, Iterable, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core import (
@@ -37,7 +44,8 @@ from repro.core import (
     ProfileTable,
     WallClock,
 )
-from repro.core.bucketing import arena_slots, bucket
+from repro.core.bucketing import arena_slots, bucket, slice_arena_slots
+from repro.core.cluster import ClusterScheduler, LiveSlice, SliceSpec
 from repro.core.scheduler import NONRT_BATCH_CAP
 from repro.serving.async_device import AsyncDevice
 from repro.serving.engine import InferenceEngine
@@ -102,6 +110,71 @@ def profile_engine(
     return table
 
 
+def _wire_live_scheduler(
+    engine: InferenceEngine,
+    table: ProfileTable,
+    loop: WallClock,
+    kinds: Dict[Tuple[str, Tuple[int, ...]], str],
+    utilization_bound: float = 1.0,
+    slot_aware: bool = False,
+) -> Tuple[DeepRT, AsyncDevice]:
+    """Wire one live DeepRT over one engine behind the device contract.
+
+    Shared by the single-device ``build_live_scheduler`` and the
+    per-slice loop of ``build_live_cluster``. ``slot_aware=True`` makes
+    decode jobs step the arena's allocator-live rows (the cluster leases
+    one row per admitted decode stream) instead of the synthetic
+    first-``batch_size``-rows prefix; either way the SAME compiled
+    program executes — batch size is data.
+    """
+
+    def kind_of(job) -> str:
+        return kinds.get((job.category.model_id, job.shape_key), "prefill")
+
+    def job_bytes(job) -> float:
+        return engine.job_bytes(
+            job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
+        )
+
+    def executed_rows(job) -> int:
+        # Arena decode always runs max_slots rows; prefill pads to the
+        # power-of-two bucket. Keeps Metrics.padding_waste describing
+        # what the engine really launched.
+        if kind_of(job) == "decode":
+            return engine.max_slots
+        return bucket(job.batch_size)
+
+    def dispatch_job(job):
+        mid, shape = job.category.model_id, job.shape_key
+        kind = kind_of(job)
+        if slot_aware and kind == "decode":
+            live = engine.arena(mid, shape[0]).live
+            if live:
+                # Continuous batching: every step advances ALL leased
+                # rows (partial stepping would clobber skipped rows'
+                # caches — see engine.dispatch).
+                return engine.dispatch(mid, shape, len(live), kind, slots=live)
+        return engine.dispatch(mid, shape, job.batch_size, kind)
+
+    device = AsyncDevice(loop, dispatch_fn=dispatch_job)
+    # exec_time under async dispatch is the busy-until ESTIMATE (the
+    # profiled WCET); the device reports the real completion instant.
+    sched = DeepRT(
+        table,
+        loop=loop,
+        execution=ExecutionModel(actual_fn=lambda job, wcet: wcet),
+        utilization_bound=utilization_bound,
+        device=device,
+    )
+    sched.worker.job_bytes_fn = job_bytes
+    sched.worker.executed_rows_fn = executed_rows
+    # Non-RT requests bypass admission (the flat table's inf cannot
+    # reject them), so bound their batches by the arena too — including
+    # for caller-supplied engines whose max_slots may be small.
+    sched.nonrt_batch_cap = min(sched.nonrt_batch_cap, engine.max_slots)
+    return sched, device
+
+
 def build_live_scheduler(
     configs: Dict[str, ModelConfig],
     categories: Iterable[Tuple[str, Tuple[int, ...], str]],
@@ -125,46 +198,69 @@ def build_live_scheduler(
             configs, max_slots=arena_slots(max(*batch_sizes, NONRT_BATCH_CAP))
         )
     cats = list(categories)
-    kinds = {(mid, shape): kind for mid, shape, kind in cats}
+    kinds = {(mid, tuple(shape)): kind for mid, shape, kind in cats}
     table = profile_engine(engine, cats, batch_sizes)
     engine.reset_stats()  # stats cover served traffic, not profiling
-    loop = WallClock()
-
-    def kind_of(job) -> str:
-        return kinds.get((job.category.model_id, job.shape_key), "prefill")
-
-    def job_bytes(job) -> float:
-        return engine.job_bytes(
-            job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
-        )
-
-    def executed_rows(job) -> int:
-        # Arena decode always runs max_slots rows; prefill pads to the
-        # power-of-two bucket. Keeps Metrics.padding_waste describing
-        # what the engine really launched.
-        if kind_of(job) == "decode":
-            return engine.max_slots
-        return bucket(job.batch_size)
-
-    device = AsyncDevice(
-        loop,
-        dispatch_fn=lambda job: engine.dispatch(
-            job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
-        ),
+    sched, _device = _wire_live_scheduler(
+        engine, table, WallClock(), kinds, utilization_bound
     )
-    # exec_time under async dispatch is the busy-until ESTIMATE (the
-    # profiled WCET); the device reports the real completion instant.
-    sched = DeepRT(
-        table,
-        loop=loop,
-        execution=ExecutionModel(actual_fn=lambda job, wcet: wcet),
-        utilization_bound=utilization_bound,
-        device=device,
-    )
-    sched.worker.job_bytes_fn = job_bytes
-    sched.worker.executed_rows_fn = executed_rows
-    # Non-RT requests bypass admission (the flat table's inf cannot
-    # reject them), so bound their batches by the arena too — including
-    # for caller-supplied engines whose max_slots may be small.
-    sched.nonrt_batch_cap = min(sched.nonrt_batch_cap, engine.max_slots)
     return sched, engine, table
+
+
+def build_live_cluster(
+    configs: Dict[str, ModelConfig],
+    categories: Iterable[Tuple[str, Tuple[int, ...], str]],
+    slice_names: Sequence[str] = ("slice0", "slice1"),
+    batch_sizes=(1, 2, 4, 8),
+    utilization_bounds: Optional[Dict[str, float]] = None,
+    profile_runs: int = 5,
+    nonrt_cap: int = NONRT_BATCH_CAP,
+) -> Tuple[ClusterScheduler, Dict[str, LiveSlice]]:
+    """Build a live multi-slice cluster: ``build_live_scheduler``, sliced.
+
+    One shared WallClock; per slice, its OWN InferenceEngine (resident
+    KV arena sized by ``bucketing.slice_arena_slots`` under that slice's
+    Phase-1 utilization bound), its own AsyncDevice, and its own
+    profiled WCET table — the arena is device-resident state, so slicing
+    the fleet slices the arenas (ROADMAP open item, shipped here).
+    Placement, spill-on-reject, per-request arena-row leases, and
+    ``fail_slice`` re-admission all run through the returned
+    ``ClusterScheduler``.
+
+    ``utilization_bounds``: per-slice-name Phase-1 ceiling (default 1.0).
+    ``profile_runs``: offline-profiler repetitions per slice (each slice
+    profiles its own compiled programs — WCETs are per-mesh).
+    ``nonrt_cap``: lets callers that serve no non-RT traffic shrink the
+    arena floor below ``NONRT_BATCH_CAP`` (tests, benchmarks).
+    """
+    cats = list(categories)
+    kinds = {(mid, tuple(shape)): kind for mid, shape, kind in cats}
+    bounds = dict(utilization_bounds or {})
+    unknown = set(bounds) - set(slice_names)
+    if unknown:
+        # A typoed bound would otherwise silently default that slice to
+        # 1.0 — full-size arena, unbounded admission.
+        raise ValueError(
+            f"utilization_bounds for unknown slices {sorted(unknown)}; "
+            f"slice_names = {list(slice_names)}"
+        )
+    loop = WallClock()
+    cluster = ClusterScheduler(loop=loop)
+    slices: Dict[str, LiveSlice] = {}
+    max_batch = max(*batch_sizes, nonrt_cap)
+    for name in slice_names:
+        bound = bounds.get(name, 1.0)
+        engine = InferenceEngine(
+            configs, max_slots=slice_arena_slots(max_batch, bound)
+        )
+        table = profile_engine(engine, cats, batch_sizes, runs=profile_runs)
+        engine.reset_stats()  # stats cover served traffic, not profiling
+        sched, _device = _wire_live_scheduler(
+            engine, table, loop, kinds,
+            utilization_bound=bound, slot_aware=True,
+        )
+        spec = SliceSpec(name=name, table=table, utilization_bound=bound)
+        sl = LiveSlice(spec, scheduler=sched, engine=engine, kinds=kinds)
+        cluster.register(sl)
+        slices[name] = sl
+    return cluster, slices

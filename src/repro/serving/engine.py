@@ -156,6 +156,10 @@ class InferenceEngine:
         self._reset_fn = jax.jit(
             cache_reset_rows, donate_argnums=(0,) if donate_cache else ()
         )
+        # Set by ``freeze`` when the slice owning this engine fails: the
+        # cluster layer re-admits the slice's requests elsewhere, and
+        # nothing may touch this engine's arenas again.
+        self.frozen = False
         # Measured padding/compile accounting.
         self.stats: Dict[str, int] = {}
         self.reset_stats()
@@ -169,6 +173,25 @@ class InferenceEngine:
             real_rows=0, bucket_rows=0, real_slots=0, total_slots=0,
             dispatches=0, decode_compiles=0, prefill_compiles=0,
         )
+
+    def freeze(self) -> None:
+        """Permanently disable dispatch and slot traffic (idempotent).
+
+        Called when the slice owning this engine fails: its in-flight
+        requests re-admit onto OTHER slices' arenas, so any further
+        dispatch/alloc/free here is a failover bug — raise instead of
+        silently mutating a dead arena. The resident buffers are left in
+        place (the cluster's fault-injection tests assert they are never
+        touched again); process teardown reclaims them.
+        """
+        self.frozen = True
+
+    def _check_not_frozen(self, op: str) -> None:
+        if self.frozen:
+            raise RuntimeError(
+                f"engine is frozen (its slice failed); {op} must target a "
+                f"surviving slice's engine"
+            )
 
     # ----- compiled step factories ----------------------------------------
     def _prefill_fn(self, mid: str, seq: int, batch: int):
@@ -238,6 +261,7 @@ class InferenceEngine:
         inf beyond it) so a full arena means an admission bug, not a
         capacity surprise.
         """
+        self._check_not_frozen("alloc_slots")
         arena = self.arena(mid, seq)
         if n < 1:
             raise ValueError(f"need >= 1 slot, got {n}")
@@ -259,6 +283,7 @@ class InferenceEngine:
 
     def free_slots(self, mid: str, seq: int, slots: Sequence[int]) -> None:
         """Return rows to the allocator (wiped lazily on next alloc)."""
+        self._check_not_frozen("free_slots")
         arena = self.arena(mid, seq)
         ids = [int(s) for s in slots]
         if not ids:
@@ -346,6 +371,7 @@ class InferenceEngine:
         cursors change, and in slot mode both are device-resident, so a
         steady-state step transfers nothing.
         """
+        self._check_not_frozen("dispatch")
         seq = shape_key[0]
         self.stats["dispatches"] += 1
         if kind == "prefill":

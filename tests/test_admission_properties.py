@@ -23,6 +23,12 @@ P3 (Phase-1 generosity): Phase 1 is a throughput heuristic, not a safety
 import math
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (installed in CI); a bare "
+    "environment skips this module instead of breaking collection",
+)
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,421 @@
+"""Cluster-grade tests for live multi-slice serving (core/cluster.py +
+serving/batcher_bridge.build_live_cluster).
+
+Covers the three properties the live cluster must hold:
+
+- FAILOVER: killing a slice mid-decode re-admits or explicitly rejects
+  every in-flight request (none silently dropped), never touches the
+  dead slice's arena rows again, and re-leases rows on surviving
+  slices' resident arenas (no arena re-creation, no recompiles).
+- PLACEMENT: no sequence of submissions drives any slice past its
+  Phase-1 utilization bound; spill-on-reject tries slices in
+  utilization order; a slice with no free arena row is skipped.
+- ARENA ISOLATION: slices hosting the same (model, seq) hold distinct
+  resident buffers and compile independently — churn on one slice never
+  recompiles or reshapes another.
+
+Plus the component contracts these rest on: ``slice_arena_slots``
+sizing, ``InferenceEngine.freeze``, and ``AsyncDevice.close``.
+
+Wall-clock runs are kept short (tiny models, sub-second periods); the
+assertions are accounting invariants, not timings, so they hold on slow
+CI runners.
+"""
+import time
+
+import jax
+import pytest
+
+from repro.configs.registry import tiny
+from repro.core import Category, Request
+from repro.core.bucketing import arena_slots, slice_arena_slots
+from repro.serving.async_device import AsyncDevice
+from repro.serving.batcher_bridge import build_live_cluster
+from repro.serving.engine import InferenceEngine
+from repro.core.simulator import WallClock
+
+MID = "granite-3-2b"
+SEQ_PRE = 16  # prefill category shape
+SEQ_DEC = 8  # decode category shape (distinct: one kind per shape key)
+
+DEC_CAT = Category(MID, (SEQ_DEC,))
+PRE_CAT = Category(MID, (SEQ_PRE,))
+
+
+def make_cluster(n=2, bounds=None, batch_sizes=(1, 2), nonrt_cap=1):
+    """Tiny live cluster: one model, prefill + decode categories.
+
+    ``nonrt_cap=1`` keeps per-slice arenas at ``bucket(max(batch_sizes))``
+    rows so lease-exhaustion paths are reachable with few requests.
+    """
+    configs = {MID: tiny(MID)}
+    cats = [(MID, (SEQ_PRE,), "prefill"), (MID, (SEQ_DEC,), "decode")]
+    return build_live_cluster(
+        configs,
+        cats,
+        slice_names=tuple(f"s{i}" for i in range(n)),
+        batch_sizes=batch_sizes,
+        utilization_bounds=bounds,
+        profile_runs=2,
+        nonrt_cap=nonrt_cap,
+    )
+
+
+def decode_request(period=0.2, deadline=0.4, n_frames=12):
+    return Request(
+        category=DEC_CAT, period=period, relative_deadline=deadline,
+        n_frames=n_frames,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-slice arena sizing rule
+# ---------------------------------------------------------------------------
+class TestSliceArenaSizing:
+    def test_full_bound_matches_single_device_rule(self):
+        for b in (1, 2, 5, 8, 12):
+            assert slice_arena_slots(b, 1.0) == arena_slots(b)
+
+    def test_bound_scales_rows_down(self):
+        assert slice_arena_slots(8, 0.5) == arena_slots(4) == 4
+        assert slice_arena_slots(8, 0.25) == 2
+        assert slice_arena_slots(6, 0.5) == arena_slots(3) == 4
+
+    def test_floor_and_validation(self):
+        # A thin slice still hosts at least one decode stream.
+        assert slice_arena_slots(8, 0.01) == 1
+        assert slice_arena_slots(8, 0.01, min_slots=2) == 2
+        for bad in (0.0, -0.5, 1.5):
+            with pytest.raises(ValueError):
+                slice_arena_slots(8, bad)
+        with pytest.raises(ValueError):
+            slice_arena_slots(8, 0.5, min_slots=0)
+
+
+# ---------------------------------------------------------------------------
+# Engine freeze (fail-stop contract)
+# ---------------------------------------------------------------------------
+class TestEngineFreeze:
+    @pytest.fixture(scope="class")
+    def frozen_engine(self):
+        engine = InferenceEngine({MID: tiny(MID)}, max_slots=2)
+        engine.execute(MID, (SEQ_DEC,), 1, kind="decode")  # arena + program
+        slots = engine.alloc_slots(MID, SEQ_DEC, 1)
+        stats = dict(engine.stats)
+        arena = engine.arena(MID, SEQ_DEC)
+        counters = (arena.allocs, arena.resets, tuple(arena.live))
+        engine.freeze()
+        return engine, slots, stats, counters
+
+    def test_all_ops_raise_after_freeze(self, frozen_engine):
+        engine, slots, _, _ = frozen_engine
+        with pytest.raises(RuntimeError, match="frozen"):
+            engine.dispatch(MID, (SEQ_DEC,), 1, kind="decode")
+        with pytest.raises(RuntimeError, match="frozen"):
+            engine.dispatch(MID, (SEQ_PRE,), 1, kind="prefill")
+        with pytest.raises(RuntimeError, match="frozen"):
+            engine.alloc_slots(MID, SEQ_DEC, 1)
+        with pytest.raises(RuntimeError, match="frozen"):
+            engine.free_slots(MID, SEQ_DEC, slots)
+
+    def test_frozen_engine_state_untouched(self, frozen_engine):
+        engine, slots, stats, counters = frozen_engine
+        for op in (
+            lambda: engine.dispatch(MID, (SEQ_DEC,), 1, kind="decode"),
+            lambda: engine.alloc_slots(MID, SEQ_DEC, 1),
+            lambda: engine.free_slots(MID, SEQ_DEC, slots),
+        ):
+            with pytest.raises(RuntimeError):
+                op()
+        arena = engine.arena(MID, SEQ_DEC)
+        assert dict(engine.stats) == stats
+        assert (arena.allocs, arena.resets, tuple(arena.live)) == counters
+
+    def test_freeze_is_idempotent(self, frozen_engine):
+        engine, _, _, _ = frozen_engine
+        engine.freeze()
+        assert engine.frozen
+
+
+# ---------------------------------------------------------------------------
+# AsyncDevice fail-stop
+# ---------------------------------------------------------------------------
+class _InstantHandle:
+    def wait(self):
+        time.sleep(0.01)
+
+
+class TestAsyncDeviceClose:
+    def test_open_device_delivers_completion(self):
+        loop = WallClock()
+        done = []
+        dev = AsyncDevice(loop, dispatch_fn=lambda job: _InstantHandle())
+        assert dev.idle and not dev.closed
+        dev.submit("j", 0.5, lambda job, now: done.append(job))
+        assert not dev.idle
+        loop.run()
+        assert done == ["j"]
+        assert dev.idle
+
+    def test_closed_device_swallows_inflight_completion(self):
+        loop = WallClock()
+        done = []
+        dev = AsyncDevice(loop, dispatch_fn=lambda job: _InstantHandle())
+        dev.submit("j", 0.5, lambda job, now: done.append(job))
+        dev.close()  # slice fails while the job is in flight
+        loop.run()  # waiter posts the completion; it must be swallowed
+        assert done == []
+        assert dev.closed
+        assert not dev.idle  # never idle again: EDF will not re-dispatch
+        assert dev.busy_until is None  # device state itself is released
+
+    def test_submit_after_close_raises_and_close_is_idempotent(self):
+        loop = WallClock()
+        dev = AsyncDevice(loop, dispatch_fn=lambda job: _InstantHandle())
+        dev.close()
+        dev.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            dev.submit("j", 0.1, lambda job, now: None)
+
+
+# ---------------------------------------------------------------------------
+# Placement invariants
+# ---------------------------------------------------------------------------
+class TestPlacementInvariants:
+    def test_no_submission_sequence_exceeds_phase1_bound(self):
+        bounds = {"s0": 0.4, "s1": 0.4}
+        # slice_arena_slots(4, 0.4) = 2: each bounded slice gets a 2-row
+        # arena (the bound scales rows down from the unbounded 4).
+        cluster, slices = make_cluster(2, bounds=bounds, batch_sizes=(1, 2, 4))
+        # W = 0.5 * 0.4 = 0.2 and period 0.11 give each decode stream
+        # n_g = floor(0.2/0.11) = 1 mean frame per window (incommensurate
+        # period: no frame ever lands exactly on a joint, so live batches
+        # stay <= 2). One stream per slice fits; folding a THIRD stream
+        # into either slice makes n_g = 3 > max_slots = 2, pushing the
+        # flat WCET lookup to inf: Phase 1 must reject rather than let
+        # any slice exceed its bound (or its arena program).
+        results = []
+        for _ in range(4):
+            r = decode_request(period=0.11, deadline=0.4, n_frames=100)
+            results.append(cluster.submit_request(r))
+            for name, sl in slices.items():
+                assert sl.utilization() <= bounds[name] + 1e-6, (
+                    f"{name} pushed past its Phase-1 bound"
+                )
+        assert results == [True, True, False, False]
+        assert len(cluster.dropped) == 2
+        # The rejections came from admission, not the lease gate: both
+        # slices still had a free arena row when they refused.
+        for _rid, ranked, chosen in list(cluster.placement_attempts)[2:]:
+            assert chosen is None and len(ranked) == 2
+        for sl in slices.values():
+            assert len(sl.engine.arena(MID, SEQ_DEC).live) == 1
+            assert len(sl.engine.arena(MID, SEQ_DEC).free) == 1
+
+    def test_placement_spreads_and_attempts_are_utilization_ordered(self):
+        cluster, _slices = make_cluster(2)
+        r1, r2 = decode_request(), decode_request()
+        assert cluster.submit_request(r1)
+        assert cluster.submit_request(r2)
+        # Identical requests land on different slices: the second sees the
+        # first slice's risen utilization and takes the emptier one.
+        assert (
+            cluster.placement[r1.request_id] != cluster.placement[r2.request_id]
+        )
+        for _rid, ranked, _chosen in cluster.placement_attempts:
+            utils = [u for _name, u in ranked]
+            assert utils == sorted(utils)
+
+    def test_lease_exhaustion_spills_then_sheds(self):
+        # 2 rows per slice (batch_sizes=(1,2), nonrt_cap=1): four decode
+        # streams fill the pod; the fifth finds no free row anywhere.
+        cluster, slices = make_cluster(2)
+        reqs = [decode_request() for _ in range(5)]
+        results = [cluster.submit_request(r) for r in reqs]
+        assert results[:4] == [True, True, True, True]
+        assert results[4] is False
+        assert [r.request_id for r in cluster.dropped] == [reqs[4].request_id]
+        for sl in slices.values():
+            arena = sl.engine.arena(MID, SEQ_DEC)
+            assert len(arena.live) == 2  # full, never oversubscribed
+        # The shed attempt ranked both slices but chose none.
+        rid, ranked, chosen = cluster.placement_attempts[-1]
+        assert rid == reqs[4].request_id
+        assert len(ranked) == 2 and chosen is None
+
+    def test_unknown_bound_key_fails_loudly(self):
+        # A typoed slice name must not silently default to bound 1.0.
+        with pytest.raises(ValueError, match="unknown slices"):
+            make_cluster(2, bounds={"slice-0": 0.25})
+
+    def test_per_slice_bound_spills_to_bigger_slice(self):
+        # s0's Phase-1 ceiling is below any real request's utilization, so
+        # even as the lowest-utilization candidate it must reject and the
+        # request must spill to s1.
+        cluster, slices = make_cluster(2, bounds={"s0": 0.001, "s1": 1.0})
+        r = Request(
+            category=PRE_CAT, period=0.01, relative_deadline=0.1, n_frames=50
+        )
+        assert cluster.submit_request(r)
+        assert cluster.placement[r.request_id] == "s1"
+        _rid, ranked, chosen = cluster.placement_attempts[-1]
+        assert [name for name, _u in ranked][0] == "s0"  # tried first
+        assert chosen == "s1"
+        assert slices["s0"].utilization() <= 0.001 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Failover: one live fault-injection scenario, several invariants
+# ---------------------------------------------------------------------------
+class TestFailover:
+    @pytest.fixture(scope="class")
+    def scenario(self):
+        """Kill one slice mid-decode; drain the survivor to completion."""
+        cluster, slices = make_cluster(2, batch_sizes=(1, 2, 4))  # 4 rows
+        reqs = [decode_request(period=0.2, deadline=0.4, n_frames=12)
+                for _ in range(4)]
+        for r in reqs:
+            assert cluster.submit_request(r), "probe workload must admit"
+        by_slice = {}
+        for rid, name in cluster.placement.items():
+            by_slice.setdefault(name, []).append(rid)
+        assert len(by_slice) == 2, "placement must use both slices"
+        # Run into the streams so the failure hits mid-decode.
+        cluster.run(until=cluster.loop.now + 0.45)
+        dead = max(by_slice, key=lambda n: (len(by_slice[n]), n))
+        survivor = next(n for n in by_slice if n != dead)
+        victims = [rid for rid, n in cluster.placement.items() if n == dead]
+        assert victims, "the failed slice must hold in-flight requests"
+        at_failure = {
+            "completed": cluster.aggregate_metrics()["completed_frames"],
+            "survivor_allocs": slices[survivor].engine.arena(MID, SEQ_DEC).allocs,
+            "survivor_live": len(slices[survivor].engine.arena(MID, SEQ_DEC).live),
+        }
+        lost = cluster.fail_slice(dead)
+        dead_eng = slices[dead].engine
+        dead_arena = dead_eng.arena(MID, SEQ_DEC)
+        after_fail = {
+            "dead_stats": dict(dead_eng.stats),
+            "dead_live": tuple(dead_arena.live),
+            "dead_counters": (dead_arena.allocs, dead_arena.resets),
+            "survivor_live": len(slices[survivor].engine.arena(MID, SEQ_DEC).live),
+        }
+        cluster.run()  # drain everything
+        return dict(
+            cluster=cluster, slices=slices, dead=dead, survivor=survivor,
+            victims=victims, lost=lost, at_failure=at_failure,
+            after_fail=after_fail,
+        )
+
+    def test_every_inflight_request_accounted(self, scenario):
+        cluster = scenario["cluster"]
+        dropped_ids = {r.request_id for r in cluster.dropped}
+        for rid in scenario["victims"]:
+            # Each victim must appear in exactly one ledger: rerouted
+            # (failover_map -> tail id), shed (failover_map -> None, its
+            # fresh tail in dropped), or finished arriving pre-failure.
+            in_map = rid in cluster.failover_map
+            finished = rid in cluster.finished_with_slice
+            assert in_map or finished, (
+                f"request {rid} silently dropped by failover"
+            )
+            assert not (in_map and finished)
+            if in_map and cluster.failover_map[rid] is None:
+                assert any(
+                    t.request_id in dropped_ids for t in scenario["lost"]
+                )
+            assert rid not in cluster.placement  # no longer on the dead slice
+
+    def test_rerouted_tails_land_on_survivor_arena(self, scenario):
+        cluster = scenario["cluster"]
+        tails = [t for t in cluster.failover_map.values() if t is not None]
+        assert tails, "at least one tail must re-admit"
+        for tail_rid in tails:
+            assert cluster.placement[tail_rid] == scenario["survivor"]
+        # Re-admission LEASED rows on the survivor's existing arena:
+        grew = (
+            scenario["after_fail"]["survivor_live"]
+            - scenario["at_failure"]["survivor_live"]
+        )
+        assert grew == len(tails)
+        assert cluster.reroutes == len(tails)
+
+    def test_dead_slice_arena_never_touched_again(self, scenario):
+        dead_eng = scenario["slices"][scenario["dead"]].engine
+        assert dead_eng.frozen
+        arena = dead_eng.arena(MID, SEQ_DEC)
+        # Counters and live-row set identical after the full drain:
+        assert dict(dead_eng.stats) == scenario["after_fail"]["dead_stats"]
+        assert tuple(arena.live) == scenario["after_fail"]["dead_live"]
+        assert (arena.allocs, arena.resets) == (
+            scenario["after_fail"]["dead_counters"]
+        )
+        # The victims' rows are still held exactly as the failure left them.
+        assert scenario["after_fail"]["dead_live"], "victims held leased rows"
+
+    def test_survivor_has_zero_decode_recompiles(self, scenario):
+        surv_eng = scenario["slices"][scenario["survivor"]].engine
+        assert surv_eng.stats["decode_compiles"] == 0
+        assert surv_eng.stats["dispatches"] > 0  # it did serve
+
+    def test_serving_continues_after_failure(self, scenario):
+        cluster = scenario["cluster"]
+        agg = cluster.aggregate_metrics()
+        assert agg["completed_frames"] > scenario["at_failure"]["completed"]
+        assert agg["miss_rate"] < 1.0
+
+    def test_leases_released_when_streams_drain(self, scenario):
+        surv_eng = scenario["slices"][scenario["survivor"]].engine
+        arena = surv_eng.arena(MID, SEQ_DEC)
+        assert tuple(arena.live) == ()  # all rows recycled to the allocator
+        surv = scenario["slices"][scenario["survivor"]]
+        assert surv.leases == {}
+
+
+# ---------------------------------------------------------------------------
+# Per-slice arena isolation
+# ---------------------------------------------------------------------------
+class TestArenaIsolation:
+    @pytest.fixture(scope="class")
+    def pair(self):
+        cluster, slices = make_cluster(2)
+        return cluster, slices["s0"], slices["s1"]
+
+    def test_same_category_distinct_arena_buffers(self, pair):
+        _cluster, s0, s1 = pair
+        a0 = s0.engine.arena(MID, SEQ_DEC)
+        a1 = s1.engine.arena(MID, SEQ_DEC)
+        assert a0 is not a1
+        ids0 = {id(leaf) for leaf in jax.tree_util.tree_leaves(a0.cache)}
+        ids1 = {id(leaf) for leaf in jax.tree_util.tree_leaves(a1.cache)}
+        assert ids0.isdisjoint(ids1)
+
+    def test_decode_churn_on_one_slice_never_recompiles_the_other(self, pair):
+        _cluster, s0, s1 = pair
+        before0 = s0.engine.stats["decode_compiles"]
+        before1 = s1.engine.stats["decode_compiles"]
+        # s1 opens a brand-new decode seq and churns batch sizes across it.
+        for b in (1, 2, 1, 2, 1):
+            s1.engine.execute(MID, (10,), b, kind="decode")
+        assert s1.engine.stats["decode_compiles"] == before1 + 1  # one program
+        assert s0.engine.stats["decode_compiles"] == before0
+        assert (MID, 10) not in s0.engine._arenas  # no cross-slice arena
+
+    def test_prefill_compiles_are_per_slice(self, pair):
+        _cluster, s0, s1 = pair
+        before0 = s0.engine.stats["prefill_compiles"]
+        s1.engine.execute(MID, (SEQ_PRE,), 3, kind="prefill")  # new bucket 4
+        assert s1.engine.stats["prefill_compiles"] >= 1
+        assert s0.engine.stats["prefill_compiles"] == before0
+
+    def test_steady_slice_buffers_stable_under_neighbor_churn(self, pair):
+        _cluster, s0, s1 = pair
+        a0 = s0.engine.arena(MID, SEQ_DEC)
+        ids_before = [id(leaf) for leaf in jax.tree_util.tree_leaves(a0.cache)]
+        for b in (1, 2, 1):
+            s1.engine.execute(MID, (SEQ_DEC,), b, kind="decode")
+        a0_after = s0.engine.arena(MID, SEQ_DEC)
+        assert a0_after is a0
+        ids_after = [id(leaf) for leaf in jax.tree_util.tree_leaves(a0.cache)]
+        assert ids_after == ids_before
+        assert s0.engine.stats["decode_compiles"] == 0

@@ -6,6 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (installed in CI); a bare "
+    "environment skips this module instead of breaking collection",
+)
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
