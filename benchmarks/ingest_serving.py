@@ -1,0 +1,272 @@
+"""Ingest serving benchmark: real payload bytes arrival -> staged device
+buffer, plus the load-shedding A/B under overload.
+
+Two arms:
+
+1. LIVE STAGED STEADY STATE (real compiled programs, one WallClock):
+   build a live cluster (``build_live_cluster``), register camera
+   streams (prefill token rows + decode token streams) through the
+   ingest gateway, serve to completion. Reported: steady-state
+   host->device staging traffic (bytes/step per slice — real ingestion
+   means every step PAYS a payload transfer; the ring makes it the only
+   per-step host cost), end-to-end latency (arrival -> completion,
+   alongside the scheduler-relative latency), and the hot-loop
+   invariants.
+
+2. SHEDDING A/B UNDER 2x OVERLOAD (deterministic simulation): one
+   admitted stream whose bursty source delivers its declared frame
+   budget at twice the admitted rate (``BurstSource(duty=0.5)``) — the
+   overload admission never saw, which is exactly where arrival-side
+   degradation must act. Same trace with and without the gateway's
+   adaptation-driven shedder.
+
+Acceptance bars (asserted, also in ``--smoke``):
+
+- ZERO decode recompiles across the whole served run (staged payloads
+  hit the one resident arena program);
+- ZERO fresh host allocations on the staged steady state: every ring's
+  ``host_allocs`` still equals its depth after serving;
+- shedding yields STRICTLY fewer deadline misses than no-shedding under
+  the 2x overload, and every dropped frame is accounted
+  (completed + dropped == ingested — nothing silently vanishes);
+- throughput finite and positive (NaN guard).
+
+Writes ``BENCH_ingest_serving.json`` at the repo root (plus the usual
+CSV under benchmarks/results/) so successive PRs can track the numbers.
+
+    PYTHONPATH=src python -m benchmarks.ingest_serving [--smoke]
+
+``--smoke`` (CI): tiny shapes, short streams, no root-JSON rewrite — a
+bit-rot guard for the ingest gateway path, not a timing source.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import check_finite, write_csv
+from repro.configs.registry import tiny
+from repro.core import Category, DeepRT, ProfileTable
+from repro.ingest import BurstSource, CameraSource, IngestGateway
+from repro.serving.batcher_bridge import build_live_cluster
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MID = "granite-3-2b"
+
+
+# ---------------------------------------------------------------------------
+# Arm 1: live staged steady state
+# ---------------------------------------------------------------------------
+
+
+def live_staged_arm(smoke: bool) -> Dict:
+    if smoke:
+        seq_pre, seq_dec = 16, 8
+        batch_sizes, nonrt_cap = (1, 2), 1
+        n_decode, n_prefill, frames = 2, 1, 6
+        period, deadline = 0.2, 0.4
+    else:
+        seq_pre, seq_dec = 32, 16
+        batch_sizes, nonrt_cap = (1, 2, 4), 2
+        n_decode, n_prefill, frames = 4, 2, 20
+        period, deadline = 0.2, 0.4
+
+    configs = {MID: tiny(MID)}
+    cats = [(MID, (seq_pre,), "prefill"), (MID, (seq_dec,), "decode")]
+    t0 = time.perf_counter()
+    cluster, slices = build_live_cluster(
+        configs, cats, slice_names=("slice0", "slice1"),
+        batch_sizes=batch_sizes, profile_runs=3 if smoke else 5,
+        nonrt_cap=nonrt_cap,
+    )
+    build_s = time.perf_counter() - t0
+
+    gw = IngestGateway(cluster)
+    sessions = []
+    for i in range(n_decode):
+        sessions.append(gw.register(
+            CameraSource(period=period, n_frames=frames, payload_shape=(),
+                         seed=100 + i),
+            Category(MID, (seq_dec,)), relative_deadline=deadline,
+        ))
+    for i in range(n_prefill):
+        sessions.append(gw.register(
+            CameraSource(period=period, n_frames=frames,
+                         payload_shape=(seq_pre,), seed=200 + i),
+            Category(MID, (seq_pre,)), relative_deadline=deadline,
+        ))
+    active = [s for s in sessions if s.state == "active"]
+
+    t_serve = time.perf_counter()
+    cluster.run()
+    serve_s = time.perf_counter() - t_serve
+
+    agg = cluster.aggregate_metrics()
+    throughput = agg["completed_frames"] / serve_s if serve_s > 0 else 0.0
+    per_slice = {}
+    for name, sl in slices.items():
+        eng = sl.engine
+        fills = eng.staging_fills
+        per_slice[name] = {
+            "staged_bytes_total": eng.staging_bytes,
+            "staged_steps": fills,
+            "bytes_per_step": eng.staging_bytes / fills if fills else 0.0,
+            "staging_host_allocs": eng.staging_host_allocs,
+            "staging_rings": len(eng._rings),
+            "decode_compiles": eng.stats["decode_compiles"],
+            "prefill_compiles": eng.stats["prefill_compiles"],
+            "mean_e2e_latency": sl.scheduler.metrics.mean_e2e_latency,
+            "mean_sched_latency": sl.scheduler.metrics.mean_latency,
+        }
+
+    result = {
+        "build_seconds": build_s,
+        "registered_sessions": len(sessions),
+        "active_sessions": len(active),
+        "completed_frames": agg["completed_frames"],
+        "dropped_frames": agg["dropped_frames"],
+        "miss_rate": agg["miss_rate"],
+        "mean_e2e_latency": agg["mean_e2e_latency"],
+        "throughput_frames_per_sec": throughput,
+        "per_slice": per_slice,
+    }
+
+    # Bit-rot guards.
+    assert len(active) >= 2, result
+    assert all(s.conserved() for s in sessions), result
+    check_finite("ingest throughput", throughput)
+    ingested = sum(s.frames_ingested for s in active)
+    assert agg["completed_frames"] + agg["dropped_frames"] == ingested, result
+    for name, sl in slices.items():
+        # THE hot-loop bars: zero decode recompiles on staged traffic,
+        # zero fresh host allocations (rings reuse their scratch pool).
+        assert sl.engine.stats["decode_compiles"] == 0, (name, result)
+        for ring in sl.engine._rings.values():
+            assert ring.host_allocs == ring.depth, (name, ring.shape, result)
+        # Real ingestion: payload bytes actually moved host -> device.
+        assert sl.engine.staging_bytes > 0, (name, result)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Arm 2: shedding A/B under 2x overload (deterministic simulation)
+# ---------------------------------------------------------------------------
+
+
+def _sim_table() -> ProfileTable:
+    table = ProfileTable()
+    for b in (1, 2, 4, 8, 16, 32):
+        table.record("m", (4,), b, 0.01 + 0.04 * b)
+    return table
+
+
+def shedding_arm(smoke: bool) -> Dict:
+    n_frames = 24 if smoke else 60
+    cat = Category("m", (4,))
+    arms = {}
+    for label, shedding in (("no_shed", False), ("shed", True)):
+        sched = DeepRT(_sim_table())
+        gw = IngestGateway(sched, shedding=shedding)
+        # Declared: 1 frame / 0.1s (admissible, U ~= 0.9 at the window
+        # batch); delivered: the same budget at 2x in bursts of 4.
+        src = BurstSource(
+            period=0.1, n_frames=n_frames, burst=4, duty=0.5,
+            payload_shape=(4,), seed=11,
+        )
+        session = gw.register(src, cat, relative_deadline=0.2)
+        assert session.state == "active", (label, session.state)
+        m = sched.run()
+        arms[label] = {
+            "ingested": session.frames_ingested,
+            "delivered": session.frames_delivered,
+            "dropped": m.dropped_frames,
+            "completed": m.completed_frames,
+            "missed": m.missed_frames,
+            "miss_rate": m.miss_rate,
+            "mean_e2e_latency": m.mean_e2e_latency,
+        }
+        # Conservation: nothing silently vanishes.
+        assert session.conserved(), (label, arms[label])
+        assert m.completed_frames + m.dropped_frames == n_frames, arms[label]
+
+    # THE acceptance bar: adaptation-driven shedding strictly reduces
+    # deadline misses under the overload, by actually dropping frames.
+    assert arms["no_shed"]["missed"] > 0, arms
+    assert arms["shed"]["missed"] < arms["no_shed"]["missed"], arms
+    assert arms["shed"]["dropped"] > 0, arms
+    assert arms["no_shed"]["dropped"] == 0, arms
+    return {"overload_factor": 2.0, "frames": n_frames, "arms": arms}
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(smoke: bool = False) -> List[str]:
+    live = live_staged_arm(smoke)
+    shed = shedding_arm(smoke)
+    result = {"live_staged": live, "overload_shedding": shed}
+
+    if not smoke:
+        with open(os.path.join(REPO_ROOT, "BENCH_ingest_serving.json"), "w") as f:
+            json.dump(result, f, indent=1)
+        write_csv(
+            "ingest_serving",
+            ["metric", "value"],
+            [
+                ["active_sessions", live["active_sessions"]],
+                ["completed_frames", live["completed_frames"]],
+                ["miss_rate", live["miss_rate"]],
+                ["mean_e2e_latency", live["mean_e2e_latency"]],
+                ["throughput_frames_per_sec",
+                 live["throughput_frames_per_sec"]],
+                ["bytes_per_step_slice0",
+                 live["per_slice"]["slice0"]["bytes_per_step"]],
+                ["bytes_per_step_slice1",
+                 live["per_slice"]["slice1"]["bytes_per_step"]],
+                ["overload_miss_rate_no_shed",
+                 shed["arms"]["no_shed"]["miss_rate"]],
+                ["overload_miss_rate_shed", shed["arms"]["shed"]["miss_rate"]],
+                ["overload_dropped_shed", shed["arms"]["shed"]["dropped"]],
+            ],
+        )
+
+    lines = [
+        f"ingest_serving,active_sessions,{live['active_sessions']}"
+        f"/{live['registered_sessions']}",
+        f"ingest_serving,completed_frames,{live['completed_frames']}",
+        f"ingest_serving,miss_rate,{live['miss_rate']:.3f}",
+        f"ingest_serving,mean_e2e_latency_ms,"
+        f"{live['mean_e2e_latency'] * 1e3:.2f}",
+        f"ingest_serving,throughput_fps,"
+        f"{live['throughput_frames_per_sec']:.1f}",
+    ]
+    for name, ps in live["per_slice"].items():
+        lines.append(
+            f"ingest_serving,{name}_bytes_per_step,{ps['bytes_per_step']:.1f}"
+            f" (decode_recompiles {ps['decode_compiles']},"
+            f" host_allocs {ps['staging_host_allocs']}"
+            f" over {ps['staging_rings']} rings)"
+        )
+    a = shed["arms"]
+    lines.append(
+        f"ingest_serving,overload_2x_miss_rate,"
+        f"no_shed {a['no_shed']['miss_rate']:.3f} -> "
+        f"shed {a['shed']['miss_rate']:.3f} "
+        f"(dropped {a['shed']['dropped']}/{shed['frames']}, accounted)"
+    )
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny shapes, short streams, no JSON rewrite (CI bit-rot guard)",
+    )
+    args = ap.parse_args()
+    for line in main(smoke=args.smoke):
+        print(line)

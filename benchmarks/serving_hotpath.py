@@ -134,7 +134,8 @@ class _LegacyPerBucketDecode:
     the arena deleted). A job crossing a bucket boundary hits a cold
     program (compile stall on the serving thread) and a cold cache.
     Token and cursor staging are preallocated per (bucket, true batch),
-    matching the old engine's ``_stage``/``_cursor_for`` buffers, so the
+    matching the pre-arena engine's synthetic staging buffers (the
+    ``_stage`` path that PR 4's ingestion rings later deleted), so the
     steady-state comparison is fair — the arms differ only in program/
     cache granularity.
     """

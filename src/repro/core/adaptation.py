@@ -16,6 +16,16 @@ Where no smaller profiled shape exists (e.g. rwkv6 decode: recurrent state
 is shape-free), the penalty is still tracked — it then drains through
 natural underruns (actual < profiled) — but no shape change happens. This
 is the documented fallback for shape-free categories (DESIGN.md §4).
+
+Arrival-side coupling (ingest gateway): the same penalty signal also
+drives LOAD SHEDDING at the other end of the pipeline. The paper shrinks
+resolution once a category overruns; the streaming gateway applies the
+analogous degradation to a category's *arrival rate* — while a category
+carries penalty, ``shed_scale`` tells the gateway to tighten that
+category's queue-delay budget (sheds engage earlier), and every shed
+frame is reported back via ``note_shed`` so the module sees both halves
+of the degradation it is driving (``sheds`` telemetry mirrors
+``shape_changes``).
 """
 from __future__ import annotations
 
@@ -59,16 +69,56 @@ class AdaptationModule:
         self.penalties: Dict[Category, float] = {}
         self.shape_changes = 0  # telemetry
         self.restores = 0
+        self.sheds: Dict[Category, int] = {}  # gateway-reported drops
 
     def penalty(self, category: Category) -> float:
         return self.penalties.get(category, 0.0)
 
+    # ----- arrival-side degradation (ingest gateway) --------------------
+    PENALIZED_BUDGET_TIGHTEN = 2.0
+
+    def shed_scale(self, category: Category) -> float:
+        """Queue-budget tightening factor for the gateway's load shedder.
+
+        1.0 while the category is healthy; ``PENALIZED_BUDGET_TIGHTEN``
+        while it carries overrun penalty — a penalized category's device
+        time is already proving scarcer than profiled, so its arrival
+        queue must be held to a stricter bound (shed earlier) until the
+        penalty drains. Disabled adaptation never tightens.
+        """
+        if not self.enabled:
+            return 1.0
+        if self.penalties.get(category, 0.0) > _EPS:
+            return self.PENALIZED_BUDGET_TIGHTEN
+        return 1.0
+
+    def note_shed(self, category: Category, n: int = 1) -> None:
+        """Gateway report: ``n`` frames of ``category`` were shed."""
+        self.sheds[category] = self.sheds.get(category, 0) + n
+
     def _shrunken(self, category: Category) -> Optional[ShapeKey]:
-        """The next profiled shape below the category's current shape."""
+        """The next profiled shape below the category's current shape.
+
+        The candidate must be profiled in the SAME regime as the
+        category (bucketed prefill curve vs flat decode entry): a
+        prefill category whose halved seq happens to equal some decode
+        category's shape must NOT shrink into it — the WCET there is a
+        different program's cost, and the serving bridge would dispatch
+        the job as the wrong step kind. Flat (slot-arena decode)
+        categories never shape-shrink at all: their state is resident
+        in a per-seq arena whose rows the stream LEASED — a shrunk seq
+        would be a different arena where the stream holds no row.
+        Their penalty drains through natural underruns instead, the
+        same documented fallback as shape-free categories.
+        """
+        key = (category.model_id, tuple(category.shape_key))
+        if key in self.table.flat_entries:
+            return None
+        pool = self.table.entries
         cur = self.disbatcher.shape_override(category) or category.shape_key
         cand = self.shrink_fn(cur)
         while cand is not None:
-            if self.table.has(category.model_id, cand):
+            if (category.model_id, tuple(cand)) in pool:
                 return cand
             cand = self.shrink_fn(cand)
         return None

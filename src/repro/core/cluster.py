@@ -100,6 +100,11 @@ class Slice:
     def release(self, request_id: int) -> None:
         pass
 
+    def note_dropped(self, request_id: int) -> None:
+        """Gateway shed one frame of this request: one fewer completion
+        will ever arrive, so lease frame-countdowns must advance (no-op
+        for sim slices, which hold no leases)."""
+
     def shutdown(self) -> None:
         """Fail-stop: stop hosting new requests and close the device
         (both contract implementations swallow any in-flight completion
@@ -122,7 +127,8 @@ class LiveSlice(Slice):
     """
 
     def __init__(self, spec: SliceSpec, scheduler: DeepRT, engine,
-                 kinds: Dict[Tuple[str, Tuple[int, ...]], str]):
+                 kinds: Dict[Tuple[str, Tuple[int, ...]], str],
+                 leases: Optional[Dict[int, Tuple[str, int, Tuple[int, ...]]]] = None):
         super().__init__(spec, loop=scheduler.loop, scheduler=scheduler)
         self.engine = engine
         # The slice's AsyncDevice IS the scheduler's device — derived,
@@ -130,8 +136,13 @@ class LiveSlice(Slice):
         # while metrics readers watch another.
         self.device = scheduler.device
         self.kinds = dict(kinds)
-        # request_id -> (model_id, seq, arena row ids) for decode streams:
-        self.leases: Dict[int, Tuple[str, int, Tuple[int, ...]]] = {}
+        # request_id -> (model_id, seq, arena row ids) for decode streams.
+        # The live factory passes the SAME dict it gave the dispatch
+        # closure, so slot-aligned payload staging always sees current
+        # leases (shared by reference, one source of truth).
+        self.leases: Dict[int, Tuple[str, int, Tuple[int, ...]]] = (
+            {} if leases is None else leases
+        )
         self._frames_left: Dict[int, int] = {}
         # Release rows when a request's last frame completes, without
         # stealing the adaptation module's completion hook.
@@ -182,16 +193,23 @@ class LiveSlice(Slice):
         mid, seq, slots = lease
         self.engine.free_slots(mid, seq, slots)
 
+    def _count_frame_done(self, rid: int) -> None:
+        """One of ``rid``'s frames will never need the arena row again
+        (completed OR shed upstream); release the lease on the last."""
+        left = self._frames_left.get(rid)
+        if left is None:
+            return
+        if left <= 1:
+            self.release(rid)
+        else:
+            self._frames_left[rid] = left - 1
+
+    def note_dropped(self, request_id: int) -> None:
+        self._count_frame_done(request_id)
+
     def _on_job_complete(self, job) -> None:
         for frame in job.frames:
-            rid = frame.request_id
-            left = self._frames_left.get(rid)
-            if left is None:
-                continue
-            if left <= 1:
-                self.release(rid)
-            else:
-                self._frames_left[rid] = left - 1
+            self._count_frame_done(frame.request_id)
 
     def shutdown(self) -> None:
         """Fail-stop the live stack: the device is closed by the base
@@ -298,7 +316,13 @@ class ClusterScheduler:
         return lost
 
     # -- placement + admission --------------------------------------------
-    def submit_request(self, request: Request) -> bool:
+    def submit_request(
+        self, request: Request, external_arrivals: bool = False
+    ) -> bool:
+        """``external_arrivals`` is forwarded to the chosen slice's
+        scheduler: the ingest gateway registers streams through the
+        SAME placement/admission/lease path but delivers the frames
+        itself (``DeepRT.ingest_frame``)."""
         ranked = sorted(
             ((sl.utilization(), sl.spec.name, sl)
              for sl in self.slices.values() if sl.hosts(request)),
@@ -308,7 +332,9 @@ class ClusterScheduler:
         for _u, _name, sl in ranked:
             if not sl.can_lease(request):
                 continue  # no free arena row for a new decode stream: spill
-            result = sl.scheduler.submit_request(request)
+            result = sl.scheduler.submit_request(
+                request, external_arrivals=external_arrivals
+            )
             if result.admitted:
                 sl.lease(request)
                 self.placement[request.request_id] = sl.spec.name
@@ -329,17 +355,24 @@ class ClusterScheduler:
         self.loop.run(until)
 
     def aggregate_metrics(self) -> Dict[str, float]:
-        total = missed = jobs = 0
+        total = missed = jobs = shed = 0
+        e2e_sum = 0.0
+        e2e_n = 0
         for sl in self.slices.values():
             m = sl.scheduler.metrics
             total += m.completed_frames
             missed += m.missed_frames
             jobs += m.job_count
+            shed += m.dropped_frames
+            e2e_sum += sum(m.e2e_latencies)
+            e2e_n += len(m.e2e_latencies)
         return {
             "completed_frames": total,
             "missed_frames": missed,
             "miss_rate": missed / total if total else 0.0,
             "jobs": jobs,
             "dropped_requests": len(self.dropped),
+            "dropped_frames": shed,
+            "mean_e2e_latency": e2e_sum / e2e_n if e2e_n else 0.0,
             "reroutes": self.reroutes,
         }

@@ -162,6 +162,15 @@ class DisBatcher:
         if st is None:
             raise KeyError(f"frame for unregistered category {frame.category}")
         st.frames.append(frame)
+        if st.next_index is None:
+            # Timer retired (requests looked exhausted) but a frame still
+            # arrived — gateway-driven streams are jittery, so a late
+            # frame can land after the declared last arrival. Fresh epoch
+            # at the current window: no frame is ever stranded without a
+            # closing joint.
+            st.epoch_t0 = self.loop.now + st.window
+            st.next_index = 0
+            self._arm_timer(frame.category)
 
     # ----- window machinery ----------------------------------------------
     def _arm_timer(self, cat: Category) -> None:
@@ -186,8 +195,12 @@ class DisBatcher:
         # only when the category fully drains and a request restarts it.
         now = self.loop.now
         live = [r for r in st.requests.values() if r.end_time >= now]
-        if st.requests and not live and not st.frames:
-            # All requests exhausted and queue drained: retire the timer.
+        if not live and not st.frames:
+            # All requests exhausted/removed and queue drained: retire
+            # the timer (a late frame re-arms it via ``on_frame``). Also
+            # covers a category whose every request was removed early
+            # (``IngestGateway.close``) — an empty request dict must not
+            # keep the timer alive forever.
             st.next_index = None
             return
         st.next_index += 1

@@ -13,6 +13,7 @@ WCET) to the Adaptation Module.
 from __future__ import annotations
 
 import heapq
+import math
 import time as _time
 from typing import Callable, List, Optional
 
@@ -112,9 +113,22 @@ class EDFWorker:
         self.completed_jobs: List[JobInstance] = []
         self._retry_scheduled = False  # a future-time retry is pending
         self._dispatch_pending = False  # a same-instant dispatch is pending
+        # Running WCET total of queued (not yet started) jobs — O(1)
+        # backpressure input for the ingest gateway's per-frame shed
+        # decision (summing the queue per arriving frame would be
+        # O(queue) on the arrival hot path).
+        self.queued_wcet = 0.0
 
     # ----- queue interface (DisBatcher emit target) ---------------------
     def submit(self, job: JobInstance) -> None:
+        # Snapshot the charge so the decrement at pop matches even if
+        # the table is rescaled (mark_slow) while the job is queued.
+        # Non-finite WCETs (a flat entry's inf for an unservable batch)
+        # are charged as 0 — adding inf would poison the running total
+        # with nan on the matching decrement.
+        w = self.profiled_fn(job)
+        job._queued_wcet = w if math.isfinite(w) else 0.0
+        self.queued_wcet += job._queued_wcet
         self.queue.push(job)
         self._schedule_dispatch()
 
@@ -153,6 +167,9 @@ class EDFWorker:
         job = self._pick_job()
         if job is None:
             return
+        self.queued_wcet = max(
+            0.0, self.queued_wcet - getattr(job, "_queued_wcet", 0.0)
+        )
         job.start_time = self.loop.now
         job.profiled_wcet = self.profiled_fn(job)
         actual = self.exec_time_fn(job)

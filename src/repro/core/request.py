@@ -77,13 +77,24 @@ class Request:
 
 @dataclass
 class Frame:
-    """One unit of client data awaiting inference."""
+    """One unit of client data awaiting inference.
+
+    ``payload`` carries the frame's real input bytes (int32 token array
+    for LM categories: ``(seq,)`` for prefill frames, scalar for decode
+    frames); ``None`` marks a synthetic frame (simulation traces,
+    admission pseudo-frames) whose staged input is zeros. ``ingest_time``
+    is when the bytes entered the system at the gateway — it equals
+    ``arrival_time`` unless the gateway deferred delivery; end-to-end
+    latency is measured from it.
+    """
 
     request_id: int
     category: Category
     index: int
     arrival_time: float
     deadline: float  # absolute
+    payload: Optional[object] = None  # np.ndarray when ingested
+    ingest_time: Optional[float] = None
     # Filled in on completion:
     completion_time: Optional[float] = None
 
@@ -92,6 +103,15 @@ class Frame:
         if self.completion_time is None:
             return None
         return self.completion_time - self.arrival_time
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        """Arrival-at-gateway -> completion (== ``latency`` when the
+        frame was never queued upstream of the scheduler)."""
+        if self.completion_time is None:
+            return None
+        t0 = self.ingest_time if self.ingest_time is not None else self.arrival_time
+        return self.completion_time - t0
 
     @property
     def missed(self) -> Optional[bool]:

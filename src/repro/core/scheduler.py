@@ -143,15 +143,25 @@ class DeepRT:
         return phase1_from_scheduler(self)
 
     # ----- client API ------------------------------------------------------
-    def submit_request(self, request: Request) -> AdmissionResult:
+    def submit_request(
+        self, request: Request, external_arrivals: bool = False
+    ) -> AdmissionResult:
         """Admission-test a pending request at the current time; admit on
-        success. ``request.start_time`` below now is clamped to now."""
+        success. ``request.start_time`` below now is clamped to now.
+
+        ``external_arrivals=True`` registers the admitted request with
+        the DisBatcher but schedules NO synthetic arrival events: the
+        caller (the ingest gateway) owns the frame path and delivers
+        real payload-carrying frames via ``ingest_frame``. Admission
+        still models the request at its declared period — the gateway's
+        load shedder is what reconciles declared rate with reality.
+        """
         now = self.loop.now
         if request.start_time < now:
             request.start_time = now
         if not request.category.realtime:
             request.period = max(request.period, NONRT_MIN_PERIOD)
-            self._admit(request)
+            self._admit(request, external_arrivals)
             return AdmissionResult(admitted=True, phase=0, utilization=0.0,
                                    reason="non-RT: admission bypassed")
         state = snapshot_from_scheduler(
@@ -164,41 +174,66 @@ class DeepRT:
         )
         result = self.admission.admit(state, self.utilization_bound)
         if result.admitted:
-            self._admit(request)
+            self._admit(request, external_arrivals)
         else:
             self.rejected.append(request)
         return result
 
-    def _admit(self, request: Request) -> None:
+    def _admit(self, request: Request, external_arrivals: bool = False) -> None:
         self.admitted.append(request)
         self.disbatcher.add_request(request)
-        cap = None if request.category.realtime else self.nonrt_batch_cap
+        if external_arrivals:
+            return  # the gateway drives ingest_frame itself
         for i in range(request.n_frames):
             arrival = request.frame_arrival(i)
             self.loop.schedule(
                 arrival,
-                self._make_arrival(request, i, cap),
+                self._make_arrival(request, i),
                 priority=getattr(self.loop, "PRIO_ARRIVAL", 0),
             )
 
-    def _make_arrival(self, request: Request, index: int, batch_cap: Optional[int]):
+    def _make_arrival(self, request: Request, index: int):
         def _arrive() -> None:
-            frame = Frame(
-                request_id=request.request_id,
-                category=request.category,
-                index=index,
-                arrival_time=self.loop.now,
-                deadline=self.loop.now + request.relative_deadline,
-            )
-            self.disbatcher.on_frame(frame)
-            if batch_cap is not None:
-                pending = self.disbatcher.pending_frames(request.category)
-                if len(pending) >= batch_cap:
-                    self.disbatcher._flush(request.category, self.loop.now)
-            # Non-idling: an idle device should not sit on waiting frames.
-            if self.device.idle and not self.worker.queue:
-                self.worker.on_device_idle()
+            self.ingest_frame(request, index)
         return _arrive
+
+    def ingest_frame(
+        self,
+        request: Request,
+        index: int,
+        payload=None,
+        ingest_time: Optional[float] = None,
+    ) -> Frame:
+        """Deliver one frame of an admitted request AT ARRIVAL TIME.
+
+        THE frame entry point — the internal periodic arrivals and the
+        ingest gateway's real payload-carrying deliveries both land
+        here, so deadline stamping happens at arrival (now +
+        relative_deadline), never at dispatch. ``payload`` rides the
+        frame to the engine's staging ring; ``ingest_time`` (default:
+        now) is when the bytes entered the gateway, the origin for
+        end-to-end latency.
+        """
+        now = self.loop.now
+        frame = Frame(
+            request_id=request.request_id,
+            category=request.category,
+            index=index,
+            arrival_time=now,
+            deadline=now + request.relative_deadline,
+            payload=payload,
+            ingest_time=now if ingest_time is None else ingest_time,
+        )
+        self.disbatcher.on_frame(frame)
+        self.metrics.record_ingest()
+        if not request.category.realtime:
+            pending = self.disbatcher.pending_frames(request.category)
+            if len(pending) >= self.nonrt_batch_cap:
+                self.disbatcher._flush(request.category, now)
+        # Non-idling: an idle device should not sit on waiting frames.
+        if self.device.idle and not self.worker.queue:
+            self.worker.on_device_idle()
+        return frame
 
     # ----- run --------------------------------------------------------------
     def run(self, until: Optional[float] = None) -> Metrics:

@@ -386,6 +386,25 @@ class Metrics:
     peak_resident_bytes: float = 0.0
     # (request_id, frame_index) -> (arrival, deadline, completion)
     frame_records: Dict = field(default_factory=dict)
+    # True end-to-end latency: gateway ingest -> completion. Identical to
+    # ``frame_latencies`` (scheduler arrival -> completion) unless the
+    # ingest gateway queued or deferred the frame upstream.
+    e2e_latencies: List[float] = field(default_factory=list)
+    # Load-shedding accounting: every frame the gateway drops is counted
+    # here (never silently vanished) — total and per request stream.
+    dropped_frames: int = 0
+    drops_by_request: Dict[int, int] = field(default_factory=dict)
+    # Frames handed to the scheduler (``DeepRT.ingest_frame``), counted
+    # INDEPENDENTLY of completions so the conservation property below is
+    # falsifiable — a delivered frame the scheduler loses shows up as
+    # completed + dropped < ingested.
+    delivered_frames: int = 0
+    # Slot-mode decode can consume ONE token per stream per step: when a
+    # window batches two frames of the same decode stream, the later
+    # token cannot be staged this step and is counted here (the frames
+    # still complete — this is a visible degradation signal, the cue to
+    # shorten windows or shed harder, never a silent overwrite).
+    payload_collisions: int = 0
 
     def record_frame(self, frame) -> None:
         self.completed_frames += 1
@@ -393,6 +412,8 @@ class Metrics:
             self.first_arrival = frame.arrival_time
         self.last_completion = max(self.last_completion, frame.completion_time)
         self.frame_latencies.append(frame.latency)
+        e2e = getattr(frame, "e2e_latency", None)
+        self.e2e_latencies.append(e2e if e2e is not None else frame.latency)
         self.frame_records[(frame.request_id, frame.index)] = (
             frame.arrival_time,
             frame.deadline,
@@ -401,6 +422,17 @@ class Metrics:
         if frame.missed:
             self.missed_frames += 1
             self.overdue_times.append(frame.overdue)
+
+    def record_ingest(self) -> None:
+        """One frame delivered into the scheduler at arrival."""
+        self.delivered_frames += 1
+
+    def record_drop(self, request_id: int) -> None:
+        """One ingested frame shed by the gateway before scheduling."""
+        self.dropped_frames += 1
+        self.drops_by_request[request_id] = (
+            self.drops_by_request.get(request_id, 0) + 1
+        )
 
     def record_job(self, batch_size: int, bucket_size: Optional[int] = None) -> None:
         """``bucket_size`` is the executed batch-slot count; callers whose
@@ -439,6 +471,31 @@ class Metrics:
         if self.bucket_rows == 0:
             return 0.0
         return 1.0 - self.real_rows / self.bucket_rows
+
+    @property
+    def mean_latency(self) -> float:
+        """Mean scheduler-arrival -> completion latency (seconds)."""
+        if not self.frame_latencies:
+            return 0.0
+        return sum(self.frame_latencies) / len(self.frame_latencies)
+
+    @property
+    def mean_e2e_latency(self) -> float:
+        """Mean gateway-ingest -> completion latency (seconds)."""
+        if not self.e2e_latencies:
+            return 0.0
+        return sum(self.e2e_latencies) / len(self.e2e_latencies)
+
+    @property
+    def ingested_frames(self) -> int:
+        """Everything the gateway accepted bytes for: delivered (counted
+        at ``record_ingest``, i.e. scheduler arrival) + shed. The
+        conservation check ``completed + dropped == ingested`` is
+        FALSIFIABLE for a drained ingest-path run: it fails if the
+        scheduler ever loses a delivered frame. (Baselines that record
+        completions without the ingest path leave this at dropped-only.)
+        """
+        return self.delivered_frames + self.dropped_frames
 
     @property
     def mean_dispatch_overhead(self) -> float:

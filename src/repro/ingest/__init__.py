@@ -1,0 +1,23 @@
+"""Streaming ingestion gateway: real frame/token ingestion in front of
+the DeepRT serving stack (sources -> sessions -> staging rings)."""
+from repro.ingest.session import IngestGateway, ShedPolicy, StreamSession
+from repro.ingest.sources import (
+    BurstSource,
+    CameraSource,
+    FramePlan,
+    FrameSource,
+    TraceSource,
+)
+from repro.ingest.staging import StagingRing
+
+__all__ = [
+    "IngestGateway",
+    "ShedPolicy",
+    "StreamSession",
+    "BurstSource",
+    "CameraSource",
+    "FramePlan",
+    "FrameSource",
+    "TraceSource",
+    "StagingRing",
+]

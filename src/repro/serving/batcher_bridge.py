@@ -36,6 +36,8 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.core import (
     DeepRT,
@@ -117,6 +119,7 @@ def _wire_live_scheduler(
     kinds: Dict[Tuple[str, Tuple[int, ...]], str],
     utilization_bound: float = 1.0,
     slot_aware: bool = False,
+    leases: Optional[Dict[int, Tuple[str, int, Tuple[int, ...]]]] = None,
 ) -> Tuple[DeepRT, AsyncDevice]:
     """Wire one live DeepRT over one engine behind the device contract.
 
@@ -126,10 +129,57 @@ def _wire_live_scheduler(
     one row per admitted decode stream) instead of the synthetic
     first-``batch_size``-rows prefix; either way the SAME compiled
     program executes — batch size is data.
+
+    ``leases`` (slot-aware mode) is the request_id -> (mid, seq, rows)
+    map the ``LiveSlice`` maintains — shared BY REFERENCE so decode
+    dispatch can slot-align each frame's ingested token: stream X's
+    payload lands in stream X's resident arena row, never a neighbor's.
     """
 
     def kind_of(job) -> str:
-        return kinds.get((job.category.model_id, job.shape_key), "prefill")
+        # Keyed by the CATEGORY's shape: step kind is a property of the
+        # category, and an adaptation-shrunk job must keep its kind even
+        # if its running shape coincides with another category's.
+        return kinds.get(
+            (job.category.model_id, job.category.shape_key), "prefill"
+        )
+
+    def job_payload(job):
+        """Per-frame ingested payloads, in the engine's payload form.
+        All-``None`` (simulation traces, profiler warm-up) collapses to
+        ``None`` — a zero frame through the same staging ring."""
+        if all(f.payload is None for f in job.frames):
+            return None
+        return [f.payload for f in job.frames]
+
+    # Filled in once the scheduler exists (the device needs dispatch_job
+    # at construction, before the DeepRT that owns the metrics).
+    metrics_ref: Dict[str, object] = {}
+
+    def slot_payload(job, mid: str, seq: int):
+        """{arena row -> token} for a slot-mode decode step: each
+        frame's token goes to its own stream's leased row. One step
+        consumes ONE token per row, so when a window batched two frames
+        of the same stream the EARLIEST frame's token is staged (tokens
+        stay in order) and the collision is counted in
+        ``Metrics.payload_collisions`` — visible degradation, not a
+        silent overwrite."""
+        if leases is None or all(f.payload is None for f in job.frames):
+            return None
+        out: Dict[int, int] = {}
+        for f in job.frames:
+            lease = leases.get(f.request_id)
+            if lease is None or lease[0] != mid or lease[1] != seq:
+                continue  # no resident row (e.g. re-admitted mid-window)
+            row = lease[2][0]
+            tok = 0 if f.payload is None else int(np.asarray(f.payload))
+            if row in out:
+                metrics = metrics_ref.get("metrics")
+                if metrics is not None:
+                    metrics.payload_collisions += 1
+                continue  # earliest frame's token wins (in-order)
+            out[row] = tok
+        return out or None
 
     def job_bytes(job) -> float:
         return engine.job_bytes(
@@ -144,17 +194,62 @@ def _wire_live_scheduler(
             return engine.max_slots
         return bucket(job.batch_size)
 
+    def frame_rows(job, mid: str, seq: int):
+        """Arena rows whose stream has a frame in THIS job: only they
+        run active (consume their token, advance their cursor) — a
+        leased stream with no frame this window must not eat a phantom
+        zero token. None (no lease info) = step everything active.
+        An EMPTY list is returned as-is, never collapsed to None: a job
+        whose every frame lost its lease (stream closed with a frame
+        still queued in the window) must step NOTHING active, or the
+        surviving streams' rows would each consume a phantom zero."""
+        if leases is None:
+            return None
+        rows = []
+        for f in job.frames:
+            lease = leases.get(f.request_id)
+            if lease is not None and lease[0] == mid and lease[1] == seq:
+                rows.append(lease[2][0])
+        return rows
+
     def dispatch_job(job):
         mid, shape = job.category.model_id, job.shape_key
         kind = kind_of(job)
         if slot_aware and kind == "decode":
             live = engine.arena(mid, shape[0]).live
             if live:
-                # Continuous batching: every step advances ALL leased
-                # rows (partial stepping would clobber skipped rows'
-                # caches — see engine.dispatch).
-                return engine.dispatch(mid, shape, len(live), kind, slots=live)
-        return engine.dispatch(mid, shape, job.batch_size, kind)
+                # Continuous batching: every step runs ALL leased rows
+                # through the one compiled program (partial stepping
+                # would change the dispatch shape), but only the rows
+                # whose stream has a frame this window are ACTIVE.
+                return engine.dispatch(
+                    mid, shape, len(live), kind, slots=live,
+                    payload=slot_payload(job, mid, shape[0]),
+                    step_rows=frame_rows(job, mid, shape[0]),
+                )
+        payload = job_payload(job)
+        if kind == "decode" and payload is not None:
+            if leases is None:
+                # Prefix-mode decode assigns rows POSITIONALLY per
+                # window and never advances the resident cursors — real
+                # tokens would land in different rows step to step,
+                # reading other streams' KV. Payload-carrying decode
+                # requires the slot-aware cluster path (arena-row
+                # leases); fail loudly rather than serve silently
+                # corrupted streams. (The gateway also refuses decode
+                # registration on a single-device target.)
+                raise RuntimeError(
+                    f"decode job for {mid}/{shape} carries real payload "
+                    f"but no arena leases: ingest decode streams through "
+                    f"build_live_cluster (slot-aware), not the prefix path"
+                )
+            # Cluster path with NO leased row left on this arena: every
+            # frame's stream already released its lease (closed with
+            # frames still queued). Nothing resident to step — drain the
+            # job as a zero-payload no-op (tokens discarded; the frames
+            # complete, the streams are gone).
+            payload = None
+        return engine.dispatch(mid, shape, job.batch_size, kind, payload=payload)
 
     device = AsyncDevice(loop, dispatch_fn=dispatch_job)
     # exec_time under async dispatch is the busy-until ESTIMATE (the
@@ -168,6 +263,7 @@ def _wire_live_scheduler(
     )
     sched.worker.job_bytes_fn = job_bytes
     sched.worker.executed_rows_fn = executed_rows
+    metrics_ref["metrics"] = sched.metrics
     # Non-RT requests bypass admission (the flat table's inf cannot
     # reject them), so bound their batches by the arena too — including
     # for caller-supplied engines whose max_slots may be small.
@@ -255,12 +351,18 @@ def build_live_cluster(
         )
         table = profile_engine(engine, cats, batch_sizes, runs=profile_runs)
         engine.reset_stats()  # stats cover served traffic, not profiling
+        # One lease map per slice, shared by reference between the
+        # dispatch closure (slot-aligned payload staging) and the
+        # LiveSlice (lease lifecycle).
+        leases: Dict[int, Tuple[str, int, Tuple[int, ...]]] = {}
         sched, _device = _wire_live_scheduler(
             engine, table, loop, kinds,
-            utilization_bound=bound, slot_aware=True,
+            utilization_bound=bound, slot_aware=True, leases=leases,
         )
         spec = SliceSpec(name=name, table=table, utilization_bound=bound)
-        sl = LiveSlice(spec, scheduler=sched, engine=engine, kinds=kinds)
+        sl = LiveSlice(
+            spec, scheduler=sched, engine=engine, kinds=kinds, leases=leases
+        )
         cluster.register(sl)
         slices[name] = sl
     return cluster, slices

@@ -46,8 +46,16 @@ Hot-path design (the zero-stall serving pipeline):
   but charges a fixed per-dispatch donation bookkeeping cost (~50µs+ per
   step, growing with the number of donated leaves) that swamps the
   avoided copy at small model sizes; see BENCH_serving_hotpath.json.
-- Input staging arrays are preallocated per program: no per-call
-  ``jnp.zeros`` allocation or host->device transfer on the hot path.
+- Inputs are REAL ingested bytes, staged through double-buffered
+  host->device rings (``repro.ingest.staging.StagingRing``, one ring
+  per compiled program input, keyed (kind, mid, seq, batch)): the ring
+  cycles a fixed pool of host scratch buffers — fill buffer B while the
+  in-flight program reads A — so steady-state staging performs ZERO
+  fresh host allocations and job N's output can never observe job
+  N+1's payload. ``dispatch(payload=...)`` carries the frames' token
+  bytes; ``payload=None`` stages a zero frame through the SAME ring
+  (the offline profiler's input — WCET is payload-independent). The
+  old preallocated synthetic-zeros buffer (`_stage`) is gone.
 
 ``max_slots`` sizing: use ``repro.core.bucketing.arena_slots`` over the
 largest batch admission can produce — Phase 1 bounds the mean frames per
@@ -64,9 +72,11 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.bucketing import bucket
+from repro.ingest.staging import StagingRing, check_payload_dtype
 from repro.models import model_for
 from repro.models.kvcache import cache_nbytes, cache_reset_rows
 
@@ -125,6 +135,7 @@ class InferenceEngine:
         donate_cache: Optional[bool] = None,
         masked_decode: bool = True,
         max_slots: int = 8,
+        staging_depth: int = 2,
     ):
         """``donate_cache``: None resolves by backend (module docstring);
         explicit True/False force it — the benchmark A/Bs both arms.
@@ -132,6 +143,9 @@ class InferenceEngine:
         does full attention work) — kept ONLY for the padding-waste A/B.
         ``max_slots``: decode arena rows per (model, seq); see the
         module docstring for the sizing rule.
+        ``staging_depth``: host scratch buffers per staging ring; depth-1
+        bounds concurrently in-flight staged jobs (the EDF worker keeps
+        at most one in flight, so 2 = classic double buffering).
         """
         if max_slots < 1:
             raise ValueError(f"max_slots must be >= 1, got {max_slots}")
@@ -148,7 +162,8 @@ class InferenceEngine:
             self.params[mid] = model.init(jax.random.fold_in(key, i))
         self._compiled: Dict[Tuple, Any] = {}
         self._arenas: Dict[Tuple[str, int], SlotArena] = {}
-        self._staging: Dict[Tuple, Dict[str, jax.Array]] = {}
+        self.staging_depth = staging_depth
+        self._rings: Dict[Tuple, StagingRing] = {}
         # Prefix-mode decode inputs per (mid, seq, live-count): tiny
         # (max_slots,) arrays, cached so the steady-state hot loop does
         # zero host->device transfers.
@@ -304,22 +319,109 @@ class InferenceEngine:
         """Resident bytes of the (mid, seq) decode arena."""
         return cache_nbytes(self.arena(mid, seq).cache)
 
-    # ----- preallocated input staging -------------------------------------
-    def _stage(self, kind: str, mid: str, seq: int, batch: int) -> Dict[str, jax.Array]:
-        """Preallocated input arrays per program: no fresh ``jnp.zeros``
-        allocation or host->device transfer per call. Inputs are
-        synthetic (zero tokens) for now, so one buffer per key suffices;
-        once real token ingestion lands, writes must double-buffer (fill
-        buffer B while the in-flight job reads A)."""
+    # ----- double-buffered input staging ----------------------------------
+    def staging_ring(self, kind: str, mid: str, seq: int, batch: int) -> StagingRing:
+        """The host->device staging ring for one compiled program input
+        (prefill: (bucket, seq) token rows; decode: (max_slots,) tokens).
+        Created on first use, then a fixed scratch pool forever — the
+        steady-state hot loop performs zero fresh host allocations
+        (``host_allocs`` stays at ``staging_depth``; the ingest bench
+        smoke asserts it)."""
         key = (kind, mid, seq, batch)
-        buf = self._staging.get(key)
-        if buf is None:
-            if kind == "prefill":
-                buf = {"tokens": jnp.zeros((batch, seq), jnp.int32)}
-            else:
-                buf = {"tok": jnp.zeros((batch,), jnp.int32)}
-            self._staging[key] = buf
-        return buf
+        ring = self._rings.get(key)
+        if ring is None:
+            shape = (batch, seq) if kind == "prefill" else (batch,)
+            ring = StagingRing(shape, np.int32, depth=self.staging_depth)
+            self._rings[key] = ring
+        return ring
+
+    def _stage_prefill_tokens(
+        self, ring: StagingRing, payload, n_rows: int
+    ) -> jax.Array:
+        """Stage one prefill's token rows. ``payload``: None (zero
+        frame), a dense (n_rows, seq) array, or a per-frame list of
+        Optional row arrays — the bridge's form, written straight into
+        the ring scratch (no intermediate stack allocation on the hot
+        loop). Rows longer than the running seq are CROPPED — the
+        adaptation module's shape shrink applied to real bytes (the
+        paper's resolution shrink at the token level) — shorter rows
+        zero-pad.
+        """
+        if payload is None or isinstance(payload, np.ndarray):
+            return ring.stage_rows(payload, n_rows)
+        rows = list(payload)
+        if len(rows) != n_rows:
+            raise ValueError(
+                f"prefill payload carries {len(rows)} rows for batch {n_rows}"
+            )
+        seq_run = ring.shape[1]
+
+        arrs = []
+        for r in rows:
+            if r is None:
+                arrs.append(None)
+                continue
+            arr = np.asarray(r).ravel()
+            check_payload_dtype(arr, ring.dtype)
+            arrs.append(arr)
+
+        def fill(buf: np.ndarray) -> None:
+            for i, arr in enumerate(arrs):
+                if arr is None:
+                    buf[i] = 0
+                    continue
+                n = min(arr.size, seq_run)
+                buf[i, :n] = arr[:n]
+                buf[i, n:] = 0
+            buf[n_rows:] = 0
+
+        return ring.stage(fill)
+
+    def _stage_decode_tokens(
+        self, ring: StagingRing, payload, prefix_rows: Optional[int]
+    ) -> jax.Array:
+        """Stage one decode step's token vector (all ``max_slots`` rows).
+
+        ``prefix_rows`` set (prefix-mode dispatch): ``payload`` is None,
+        a (prefix_rows,) token array, or a per-frame list of Optional
+        scalars for the leading rows. Otherwise (slot mode): ``payload``
+        is None, a full (max_slots,) slot-aligned array, or a
+        {slot_id: token} dict — the bridge builds the dict from each
+        frame's arena lease, so every stream's token lands in its own
+        resident row.
+        """
+        if payload is None:
+            return ring.stage_rows(None, 0)
+        if prefix_rows is not None:
+            if isinstance(payload, np.ndarray):
+                return ring.stage_rows(payload, prefix_rows)
+            toks = list(payload)
+            if len(toks) != prefix_rows:
+                raise ValueError(
+                    f"decode payload carries {len(toks)} tokens for "
+                    f"batch {prefix_rows}"
+                )
+
+            def fill_prefix(buf: np.ndarray) -> None:
+                buf[:] = 0
+                for i, t in enumerate(toks):
+                    if t is not None:
+                        buf[i] = int(np.asarray(t))
+
+            return ring.stage(fill_prefix)
+        if isinstance(payload, dict):
+            m = ring.shape[0]
+            bad = [s for s in payload if not 0 <= int(s) < m]
+            if bad:
+                raise ValueError(f"decode payload slot ids out of range: {bad}")
+
+            def fill(buf: np.ndarray) -> None:
+                buf[:] = 0
+                for s, tok in payload.items():
+                    buf[int(s)] = tok
+
+            return ring.stage(fill)
+        return ring.stage_rows(payload, ring.shape[0])
 
     def _prefix_inputs(
         self, mid: str, seq: int, k: int
@@ -352,6 +454,7 @@ class InferenceEngine:
     def dispatch(
         self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
         kind: str = "prefill", slots: Optional[Sequence[int]] = None,
+        payload=None, step_rows: Optional[Sequence[int]] = None,
     ) -> StepHandle:
         """Launch one batched job WITHOUT waiting for the device.
 
@@ -366,10 +469,30 @@ class InferenceEngine:
         stepping a strict subset would clobber the skipped rows; masked
         per-row cache writes are the extension point if partial stepping
         is ever needed); ``slots=None`` uses the first ``batch_size``
-        rows (the synthetic profiler/benchmark workload). Either way the
-        SAME compiled program executes — only the active bitmap and
-        cursors change, and in slot mode both are device-resident, so a
-        steady-state step transfers nothing.
+        rows (the profiler/benchmark workload). Either way the SAME
+        compiled program executes — only the active bitmap and cursors
+        change, and in slot mode both are device-resident; the staged
+        token vector is the ONE per-step host->device transfer.
+
+        ``payload`` carries the job's real ingested bytes through the
+        staging ring: prefill takes a (batch_size, seq) int32 token
+        array (rows beyond the true batch stage as zeros inside the
+        bucket); decode takes a (batch_size,) array in prefix mode or a
+        slot-aligned array / {slot: token} dict in slot mode. ``None``
+        stages a zero frame — same ring, the profiler's input.
+
+        ``step_rows`` (slot mode only): the subset of live rows that
+        carry a REAL token this step. Rows outside it stay allocator-
+        live but run with ``active=0``: their attention is masked and
+        their cursor does NOT advance, so a leased stream with no frame
+        in this window never consumes a phantom zero token — its
+        unconditional cache write lands at the frozen cursor and is
+        overwritten by the stream's next real token before anything
+        attends to it. (Recurrent-state blocks — rwkv/rglru — update
+        state unconditionally regardless of ``active``; idle-row
+        fidelity for those is the same pre-existing caveat as prefix-
+        mode dead rows.) ``None`` = every live row is active (the
+        profiler / single-stream workload).
         """
         self._check_not_frozen("dispatch")
         seq = shape_key[0]
@@ -379,9 +502,15 @@ class InferenceEngine:
             self.stats["real_rows"] += batch_size
             self.stats["bucket_rows"] += b
             fn = self._prefill_fn(mid, seq, b)
-            stage = self._stage("prefill", mid, seq, b)
-            out = fn(self.params[mid], stage["tokens"])
-            return StepHandle(out, mid, kind, batch_size, b)
+            ring = self.staging_ring("prefill", mid, seq, b)
+            tokens = self._stage_prefill_tokens(ring, payload, batch_size)
+            out = fn(self.params[mid], tokens)
+            handle = StepHandle(out, mid, kind, batch_size, b)
+            # The handle's wait guards this scratch buffer's reuse: the
+            # ring refills it only after this step finished reading it
+            # (zero-copy uploads alias host memory — see StagingRing).
+            ring.attach_consumer(handle.wait)
+            return handle
         if batch_size > self.max_slots:
             raise ValueError(
                 f"decode batch {batch_size} > max_slots {self.max_slots}: "
@@ -390,7 +519,10 @@ class InferenceEngine:
         m = self.max_slots
         arena = self.arena(mid, seq)
         fn = self._decode_fn(mid, seq)
-        stage = self._stage("decode", mid, seq, m)
+        ring = self.staging_ring("decode", mid, seq, m)
+        tok = self._stage_decode_tokens(
+            ring, payload, prefix_rows=batch_size if slots is None else None
+        )
         if slots is None:
             if len(arena.free) != arena.max_slots:
                 raise ValueError(
@@ -412,32 +544,65 @@ class InferenceEngine:
                     f"{sorted(arena.live)}, got {sorted(ids)}"
                 )
             cur, active = arena.cur, arena.active
+            if step_rows is not None:
+                step = [int(s) for s in step_rows]
+                extra = sorted(set(step) - set(ids))
+                if extra:
+                    raise ValueError(
+                        f"step_rows {extra} are not live rows {sorted(ids)}"
+                    )
+                rows = (
+                    jnp.zeros((m,), bool).at[jnp.array(step)].set(True)
+                    if step else jnp.zeros((m,), bool)
+                )
+                active = arena.active & rows
         k = batch_size if self.masked_decode else m
         self.stats["real_rows"] += batch_size
         self.stats["bucket_rows"] += m
         self.stats["real_slots"] += batch_size * seq
         self.stats["total_slots"] += k * seq
         logits, new_cache, new_cur = fn(
-            self.params[mid], arena.cache, stage["tok"], cur, active
+            self.params[mid], arena.cache, tok, cur, active
         )
         # The arena pytree is REPLACED every step (with donation the new
         # leaves alias the old buffers — in-place; without, XLA copied).
         arena.cache = new_cache
         if slots is not None:
             arena.cur = new_cur  # advanced on-device, no host round-trip
-        return StepHandle(logits, mid, kind, batch_size, m)
+        handle = StepHandle(logits, mid, kind, batch_size, m)
+        ring.attach_consumer(handle.wait)
+        return handle
 
     def execute(
         self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
         kind: str = "prefill", slots: Optional[Sequence[int]] = None,
+        payload=None,
     ) -> float:
         """Run one batched job synchronously; returns wall seconds. The
         offline profiler path (and the benchmarks' latency probes)."""
         t0 = time.perf_counter()
-        self.dispatch(mid, shape_key, batch_size, kind, slots=slots).wait()
+        self.dispatch(
+            mid, shape_key, batch_size, kind, slots=slots, payload=payload
+        ).wait()
         return time.perf_counter() - t0
 
     # ----- accounting -----------------------------------------------------
+    @property
+    def staging_bytes(self) -> int:
+        """Lifetime host->device payload bytes staged across all rings."""
+        return sum(r.bytes_staged for r in self._rings.values())
+
+    @property
+    def staging_fills(self) -> int:
+        return sum(r.fills for r in self._rings.values())
+
+    @property
+    def staging_host_allocs(self) -> int:
+        """Host scratch buffers ever allocated; equals
+        ``staging_depth * len(rings)`` forever — the zero-per-step-
+        allocation bar the ingest bench asserts."""
+        return sum(r.host_allocs for r in self._rings.values())
+
     def job_bytes(
         self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
         kind: str = "prefill",

@@ -178,10 +178,13 @@ class TestMaskedBatchDecode:
         engine = InferenceEngine({"granite-3-2b": tiny("granite-3-2b")})
         for _ in range(4):
             engine.execute("granite-3-2b", (16,), 2, kind="prefill")
-        # one (kind, mid, seq, bucket) entry; the same buffer every call.
-        assert len(engine._staging) == 1
-        (buf,) = engine._staging.values()
-        assert buf["tokens"].shape == (2, 16)
+        # one (kind, mid, seq, bucket) ring; a fixed scratch pool cycled
+        # across every call — zero fresh host allocations after build.
+        assert len(engine._rings) == 1
+        (ring,) = engine._rings.values()
+        assert ring.shape == (2, 16)
+        assert ring.fills == 4
+        assert ring.host_allocs == ring.depth == engine.staging_depth
 
 
 class TestWallClock:
