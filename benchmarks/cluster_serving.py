@@ -17,8 +17,9 @@ Acceptance bars (asserted, also in ``--smoke``):
 
 - ZERO decode recompiles on steady slices across the whole replay —
   failover traffic lands on the survivors' one resident program;
-- every request placed on the dead slice is re-admitted or explicitly
-  shed (accounting conserved — nothing silently dropped);
+- every request placed on the dead slice is re-admitted (immediately
+  or via the parked-tail retry queue), provably expired, or finished
+  (accounting conserved — nothing silently dropped);
 - aggregate throughput is finite and positive (NaN guard) and the miss
   rate stays bounded below 1.
 
@@ -104,7 +105,7 @@ def main(smoke: bool = False) -> List[str]:
         f"streams ended before fail_after={fail_after}"
     )
     completed_at_failure = cluster.aggregate_metrics()["completed_frames"]
-    lost = cluster.fail_slice(dead)
+    parked_now = cluster.fail_slice(dead)
     cluster.run()
     serve_s = time.perf_counter() - t_serve
 
@@ -119,7 +120,7 @@ def main(smoke: bool = False) -> List[str]:
         for name in slices
     }
     rerouted = sum(1 for t in cluster.failover_map.values() if t is not None)
-    shed = sum(1 for t in cluster.failover_map.values() if t is None)
+    expired = sum(1 for t in cluster.failover_map.values() if t is None)
 
     result = {
         "slices": n_slices,
@@ -130,7 +131,9 @@ def main(smoke: bool = False) -> List[str]:
         "failover": {
             "victims": len(victims),
             "rerouted": rerouted,
-            "shed": shed,
+            "parked": len(parked_now),
+            "parked_admitted": len(cluster.parked_admitted),
+            "expired": expired,
             "finished_with_slice": len(cluster.finished_with_slice),
         },
         "completed_frames": agg["completed_frames"],
@@ -146,13 +149,17 @@ def main(smoke: bool = False) -> List[str]:
 
     # Bit-rot guards (what --smoke exists for).
     assert placed >= 2, result
-    assert rerouted + shed >= 1, result  # failover actually displaced work
+    assert rerouted + expired >= 1, result  # failover actually displaced work
     check_finite("cluster throughput", throughput)
     assert agg["miss_rate"] < 1.0, result
-    # Accounting conserved: every victim re-admitted, shed, or finished.
-    accounted = rerouted + shed + len(cluster.finished_with_slice)
+    # Accounting conserved: every victim re-admitted (immediately or via
+    # the parked retry queue), provably expired while parked, or finished.
+    accounted = rerouted + expired + len(cluster.finished_with_slice)
     assert accounted == len(victims), result
-    assert shed == len(lost), result
+    assert cluster.parked == {}, result  # every parked tail resolved
+    assert len(cluster.parked_admitted) + len(cluster.parked_expired) == len(
+        parked_now
+    ), result
     # THE acceptance bar: zero decode recompiles on steady slices across
     # the failure replay — rerouted decode traffic hit the survivors' one
     # resident program, batch size stayed data.
@@ -171,7 +178,7 @@ def main(smoke: bool = False) -> List[str]:
                 ["placed_requests", placed],
                 ["victims", len(victims)],
                 ["rerouted", rerouted],
-                ["shed", shed],
+                ["expired", expired],
                 ["miss_rate", agg["miss_rate"]],
                 ["throughput_frames_per_sec", throughput],
                 ["survivor_decode_recompiles",
@@ -183,7 +190,7 @@ def main(smoke: bool = False) -> List[str]:
         f"cluster_serving,slices,{n_slices}",
         f"cluster_serving,placed_requests,{placed}/{len(reqs)}",
         f"cluster_serving,failed_slice,{dead} ({len(victims)} in-flight)",
-        f"cluster_serving,failover,rerouted {rerouted} / shed {shed}",
+        f"cluster_serving,failover,rerouted {rerouted} / expired {expired}",
         f"cluster_serving,completed_frames,{agg['completed_frames']}",
         f"cluster_serving,miss_rate,{agg['miss_rate']:.3f}",
         f"cluster_serving,throughput_fps,{throughput:.1f}",

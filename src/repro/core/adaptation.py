@@ -70,12 +70,18 @@ class AdaptationModule:
         self.shape_changes = 0  # telemetry
         self.restores = 0
         self.sheds: Dict[Category, int] = {}  # gateway-reported drops
+        # Device-health coupling (SliceHealthMonitor): True while this
+        # scheduler's device is drifting (slice suspect/quarantined).
+        self.device_degraded = False
 
     def penalty(self, category: Category) -> float:
         return self.penalties.get(category, 0.0)
 
     # ----- arrival-side degradation (ingest gateway) --------------------
     PENALIZED_BUDGET_TIGHTEN = 2.0
+    # Same lever, different trigger: the slice health monitor reports
+    # sustained WCET drift (suspect state) via ``note_device_health``.
+    DEGRADED_BUDGET_TIGHTEN = 2.0
 
     def shed_scale(self, category: Category) -> float:
         """Queue-budget tightening factor for the gateway's load shedder.
@@ -84,13 +90,25 @@ class AdaptationModule:
         while it carries overrun penalty — a penalized category's device
         time is already proving scarcer than profiled, so its arrival
         queue must be held to a stricter bound (shed earlier) until the
-        penalty drains. Disabled adaptation never tightens.
+        penalty drains. Multiplied by ``DEGRADED_BUDGET_TIGHTEN`` while
+        the health monitor holds the device degraded (slice suspect):
+        every category on a drifting device sheds earlier, penalty or
+        not. Disabled adaptation never tightens.
         """
         if not self.enabled:
             return 1.0
+        scale = 1.0
         if self.penalties.get(category, 0.0) > _EPS:
-            return self.PENALIZED_BUDGET_TIGHTEN
-        return 1.0
+            scale = self.PENALIZED_BUDGET_TIGHTEN
+        if self.device_degraded:
+            scale *= self.DEGRADED_BUDGET_TIGHTEN
+        return scale
+
+    def note_device_health(self, healthy: bool) -> None:
+        """SliceHealthMonitor report: this scheduler's device entered
+        (``healthy=False``) or left (``healthy=True``) a drifting state.
+        While degraded, ``shed_scale`` tightens for every category."""
+        self.device_degraded = not healthy
 
     def note_shed(self, category: Category, n: int = 1) -> None:
         """Gateway report: ``n`` frames of ``category`` were shed."""

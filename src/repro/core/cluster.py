@@ -42,13 +42,36 @@ from __future__ import annotations
 
 import math
 from collections import deque
-from dataclasses import dataclass
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.faults import (
+    CompletionWatchdog,
+    FaultPlan,
+    FaultyDevice,
+    WatchdogConfig,
+)
 from repro.core.profiler import ProfileTable
 from repro.core.request import Request
 from repro.core.scheduler import DeepRT, ExecutionModel
-from repro.core.simulator import EventLoop
+from repro.core.simulator import EventLoop, SequentialDevice
+
+# Slice health states (the watchdog-driven state machine):
+#
+#   HEALTHY --(suspect_after consecutive late signals)--> SUSPECT
+#   SUSPECT --(recover_after consecutive clean completions)--> HEALTHY
+#   SUSPECT --(quarantine_after consecutive late signals)--> QUARANTINED
+#   any     --(hung submit / operator fail_slice)--> QUARANTINED
+#
+# SUSPECT slices stay alive and keep serving what they already host but
+# receive NO new placements; entering and leaving SUSPECT both trigger
+# live re-profiling (the WCET table is rescaled from measured
+# completions). QUARANTINED is terminal: the slice is fail-stopped
+# (``fail_slice``) and its tails re-admitted elsewhere.
+HEALTHY = "healthy"
+SUSPECT = "suspect"
+QUARANTINED = "quarantined"
 
 
 @dataclass
@@ -76,6 +99,7 @@ class Slice:
             )
         self.scheduler = scheduler
         self.alive = True
+        self.health = HEALTHY
         self.slow_factor = 1.0
 
     def hosts(self, request: Request) -> bool:
@@ -219,8 +243,190 @@ class LiveSlice(Slice):
         self.engine.freeze()
 
 
+@dataclass
+class ParkedTail:
+    """A displaced tail no surviving slice could accept at failover time.
+
+    The tail keeps its ORIGINAL clock (``tail.start_time`` is fixed at
+    the failover instant + one period), so the frames still deliverable
+    shrink monotonically as real time passes and the entry provably
+    expires once the last frame's arrival is behind us — re-basing the
+    start on every retry would make a parked tail immortal.
+    """
+
+    origin_rid: int  # the displaced request this tail continues
+    tail: Request
+    parked_at: float
+    attempts: int = 0
+
+
+class SliceHealthMonitor:
+    """Watchdog-signal sink + the healthy/suspect/quarantined policy.
+
+    Devices report raw signals here (per-slice partials bound by the
+    factories): ``note_overdue`` from each device's
+    :class:`~repro.core.faults.CompletionWatchdog`, ``note_complete``
+    with measured ``(expected, actual)`` seconds per completion, and
+    ``note_submit_error`` on transient submit failures. The monitor
+    turns sustained drift into state transitions, quarantines hung
+    slices through the cluster's ``fail_slice``, and re-profiles WCET
+    tables from measured completions on suspect entry and recovery.
+
+    Subscribers (``subscribe(fn)``, ``fn(name, old, new)``) are notified
+    on every transition BEFORE a quarantined slice is failed, so the
+    ingest gateway can abort the slice's sessions (stop deliveries)
+    ahead of the lost-frame reconciliation.
+    """
+
+    def __init__(self, cluster: "ClusterScheduler", config: Optional[WatchdogConfig] = None):
+        self.cluster = cluster
+        self.config = config if config is not None else WatchdogConfig()
+        # name -> recent (expected, actual) completion samples.
+        self.samples: Dict[str, Deque[Tuple[float, float]]] = {}
+        self.late_streak: Dict[str, int] = {}
+        self.clean_streak: Dict[str, int] = {}
+        self.submit_errors: Dict[str, int] = {}
+        self.reprofiles: Dict[str, int] = {}
+        # Audit trail: (t, name, old, new, reason).
+        self.transitions: List[Tuple[float, str, str, str, str]] = []
+        self.listeners: List[Callable[[str, str, str], None]] = []
+
+    def subscribe(self, fn: Callable[[str, str, str], None]) -> None:
+        self.listeners.append(fn)
+
+    def state(self, name: str) -> str:
+        return self.cluster.slices[name].health
+
+    # -- device-facing signal sinks ---------------------------------------
+    def note_overdue(self, name: str, job, expected: float, elapsed: float) -> None:
+        sl = self.cluster.slices.get(name)
+        if sl is None or not sl.alive:
+            return
+        if elapsed >= self.config.hang_after(expected):
+            # A hang can never produce the late *completions* the streak
+            # counts — it is quarantined directly.
+            self._quarantine(
+                name,
+                f"hung: no completion after {elapsed:.4f}s "
+                f"(expected {expected:.4f}s)",
+            )
+            return
+        self._late_signal(name, "overdue submit")
+
+    def note_complete(self, name: str, expected: float, actual: float) -> None:
+        sl = self.cluster.slices.get(name)
+        if sl is None or not sl.alive:
+            return
+        dq = self.samples.setdefault(name, deque(maxlen=self.config.sample_window))
+        dq.append((expected, actual))
+        if actual > self.config.deadline_for(expected):
+            self._late_signal(name, "late completion")
+            return
+        self.late_streak[name] = 0
+        if sl.health == SUSPECT:
+            self.clean_streak[name] = self.clean_streak.get(name, 0) + 1
+            if self.clean_streak[name] >= self.config.recover_after:
+                self._set_state(
+                    name,
+                    HEALTHY,
+                    f"recovered: {self.config.recover_after} consecutive clean completions",
+                )
+
+    def note_submit_error(self, name: str) -> None:
+        self.submit_errors[name] = self.submit_errors.get(name, 0) + 1
+        sl = self.cluster.slices.get(name)
+        if sl is None or not sl.alive:
+            return
+        self._late_signal(name, "transient submit error")
+
+    # -- live re-profiling -------------------------------------------------
+    def measured_drift(self, name: str, n_samples: Optional[int] = None) -> float:
+        """Observed WCET drift: a high quantile of ``actual / expected``
+        over the most recent completions, clamped to >= 1 (a table is
+        never rescaled below its profiled base — underruns are normal)."""
+        dq = self.samples.get(name)
+        if not dq:
+            raise RuntimeError(f"no measured completions recorded for slice {name!r}")
+        n = n_samples if n_samples is not None else self.config.reprofile_samples
+        recent = list(dq)[-n:]
+        ratios = sorted(a / e for e, a in recent if e > 0)
+        if not ratios:
+            raise RuntimeError(f"no usable completion samples for slice {name!r}")
+        idx = int(math.ceil(self.config.reprofile_quantile * len(ratios))) - 1
+        return max(1.0, ratios[max(0, min(idx, len(ratios) - 1))])
+
+    def reprofile(self, name: str, n_samples: Optional[int] = None) -> float:
+        """Rescale the slice's WCET table from MEASURED completions.
+
+        Replaces the operator-supplied stale scale of the old
+        ``mark_slow``: admission on this slice now budgets what the
+        hardware currently delivers, not what profiling once saw. Always
+        rescales from the slice's base table, so repeated re-profiles
+        never compound."""
+        drift = self.measured_drift(name, n_samples)
+        self.cluster._rescale(name, drift)
+        self.reprofiles[name] = self.reprofiles.get(name, 0) + 1
+        return drift
+
+    # -- transitions -------------------------------------------------------
+    def _late_signal(self, name: str, reason: str) -> None:
+        self.clean_streak[name] = 0
+        self.late_streak[name] = self.late_streak.get(name, 0) + 1
+        streak = self.late_streak[name]
+        health = self.cluster.slices[name].health
+        if health == HEALTHY and streak >= self.config.suspect_after:
+            self._set_state(name, SUSPECT, f"{reason}: {streak} consecutive late signals")
+        elif health == SUSPECT and streak >= self.config.quarantine_after:
+            self._quarantine(name, f"{reason}: drift persisted for {streak} late signals")
+
+    def _quarantine(self, name: str, reason: str) -> None:
+        self._set_state(name, QUARANTINED, reason)
+        self.cluster.fail_slice(name)
+
+    def _set_state(self, name: str, new: str, reason: str) -> None:
+        sl = self.cluster.slices[name]
+        old = sl.health
+        if old == new:
+            return
+        sl.health = new
+        self.late_streak[name] = 0
+        self.clean_streak[name] = 0
+        self.transitions.append((self.cluster.loop.now, name, old, new, reason))
+        # Couple into the paper's adaptation loop: a drifting device
+        # tightens the gateway's shed budget for ALL its categories
+        # (AdaptationModule.DEGRADED_BUDGET_TIGHTEN), not just penalized
+        # ones.
+        adaptation = getattr(sl.scheduler, "adaptation", None)
+        if adaptation is not None:
+            adaptation.note_device_health(new == HEALTHY)
+        if new == SUSPECT:
+            # Entering suspect: future admissions on this slice (none
+            # while suspect, but its own running streams' re-placements)
+            # must budget the drifted WCETs.
+            try:
+                self.reprofile(name)
+            except RuntimeError:
+                pass  # no completion samples yet (e.g. first submit hung)
+        elif new == HEALTHY and old == SUSPECT:
+            # Recovery: rescale from the clean completions that proved
+            # it, restoring the table toward its profiled base.
+            try:
+                self.reprofile(name, n_samples=self.config.recover_after)
+            except RuntimeError:
+                pass
+        for fn in list(self.listeners):
+            fn(name, old, new)
+
+
 class ClusterScheduler:
-    def __init__(self, loop: Optional[EventLoop] = None, execution=None):
+    def __init__(
+        self,
+        loop: Optional[EventLoop] = None,
+        execution=None,
+        watchdog: Optional[WatchdogConfig] = None,
+        retry_backoff: float = 0.02,
+        retry_max_backoff: float = 1.0,
+    ):
         self.loop = loop if loop is not None else EventLoop()
         self.execution = execution
         self.slices: Dict[str, Slice] = {}
@@ -244,6 +450,21 @@ class ClusterScheduler:
         # no request placed on a failed slice goes unaccounted.
         self.failover_map: Dict[int, Optional[int]] = {}
         self.finished_with_slice: List[int] = []
+        # Health machinery. ``watchdog`` arms the full loop (device
+        # watchdogs are built by the factories from the same config);
+        # without it the monitor still exists so operator-driven
+        # fail_slice keeps a single audit/notification path.
+        self.watchdog = watchdog
+        self.health = SliceHealthMonitor(self, watchdog)
+        # Deadline-aware retry queue for displaced tails that no
+        # surviving slice could accept at the failover instant:
+        # origin request id -> ParkedTail. Every parked entry resolves to
+        # exactly one of ``parked_admitted`` / ``parked_expired``.
+        self.retry_backoff = retry_backoff
+        self.retry_max_backoff = retry_max_backoff
+        self.parked: Dict[int, ParkedTail] = {}
+        self.parked_admitted: List[int] = []
+        self.parked_expired: List[int] = []
 
     # -- elasticity ------------------------------------------------------
     def add_slice(self, spec: SliceSpec) -> Slice:
@@ -254,9 +475,21 @@ class ClusterScheduler:
         self.slices[sl.spec.name] = sl
         return sl
 
-    def mark_slow(self, name: str, factor: float) -> None:
+    def mark_slow(self, name: str, factor: Optional[float] = None) -> float:
         """Straggler: scale the slice's WCET table for future admissions;
-        running work is absorbed by the paper's adaptation machinery."""
+        running work is absorbed by the paper's adaptation machinery.
+
+        ``factor=None`` re-profiles live: the scale is the MEASURED
+        drift (quantile of actual/expected over recent completions,
+        tracked by the health monitor) instead of an operator-supplied
+        stale guess. An explicit factor is still accepted for tests and
+        forced degradation."""
+        if factor is None:
+            return self.health.reprofile(name)
+        self._rescale(name, factor)
+        return factor
+
+    def _rescale(self, name: str, factor: float) -> None:
         sl = self.slices[name]
         sl.slow_factor = factor
         sl.scheduler.table = sl.spec.table.scaled(factor)
@@ -269,10 +502,35 @@ class ClusterScheduler:
         so the dead slice's arena rows are never touched again; each
         displaced request's remaining tail is re-admitted through the
         normal placement + admission + lease path, which allocates rows
-        on SURVIVING slices' resident arenas. Returns requests that
-        could not be re-placed (shed load — in a soft-RT system overload
-        sheds rather than cascades)."""
+        on SURVIVING slices' resident arenas.
+
+        Tails that no surviving slice can accept at the failover instant
+        are PARKED in the deadline-aware retry queue (``parked``) and
+        retried with backoff until admitted or provably past their last
+        frame's arrival — they are returned for visibility, not shed.
+        Frames already delivered to the dead slice that never completed
+        are reconciled into its ``Metrics.lost_frames`` exactly once, so
+        ``completed + dropped + lost == ingested`` holds across failure.
+
+        Failing a slice twice (or an unknown name) raises instead of
+        silently double-displacing requests and corrupting the failover
+        accounting."""
+        if name not in self.slices:
+            raise KeyError(
+                f"fail_slice: unknown slice {name!r} (have: {sorted(self.slices)})"
+            )
         sl = self.slices[name]
+        if not sl.alive:
+            raise RuntimeError(
+                f"fail_slice: slice {name!r} already failed; failing it again "
+                f"would re-displace its requests and corrupt failover accounting"
+            )
+        if sl.health != QUARANTINED:
+            # Operator-initiated failure takes the same audit +
+            # notification path as a watchdog quarantine (listeners —
+            # e.g. the ingest gateway aborting this slice's sessions —
+            # must fire before deliveries are reconciled below).
+            self.health._set_state(name, QUARANTINED, "fail_slice (operator)")
         sl.shutdown()
         displaced: List[Tuple[int, Request]] = []
         now = self.loop.now
@@ -305,15 +563,78 @@ class ClusterScheduler:
                 start_time=now + req.period,
             )
             displaced.append((rid, tail))
-        lost = []
+        # Reconcile frames that died in the dead slice's pipeline
+        # (delivered but never completed: DisBatcher windows, the EDF
+        # queue, and the in-flight job whose completion is swallowed).
+        m = sl.scheduler.metrics
+        in_pipeline = m.delivered_frames - m.completed_frames - m.lost_frames
+        if in_pipeline > 0:
+            m.record_lost(in_pipeline)
+        parked_now: List[Request] = []
         for rid, tail in displaced:
-            if self.submit_request(tail):
+            if self._try_place(tail):
                 self.failover_map[rid] = tail.request_id
                 self.reroutes += 1
             else:
-                self.failover_map[rid] = None
-                lost.append(tail)
-        return lost
+                self._park(rid, tail)
+                parked_now.append(tail)
+        return parked_now
+
+    # -- parked-tail retry queue ------------------------------------------
+    def _park(self, origin_rid: int, tail: Request) -> None:
+        entry = ParkedTail(origin_rid=origin_rid, tail=tail, parked_at=self.loop.now)
+        self.parked[origin_rid] = entry
+        self._schedule_retry(entry)
+
+    def _schedule_retry(self, entry: ParkedTail) -> None:
+        tail = entry.tail
+        delay = min(
+            max(self.retry_backoff, tail.period) * (2 ** entry.attempts),
+            self.retry_max_backoff,
+        )
+        # Deadline-aware: never sleep past the instant the tail provably
+        # expires (one period after its last frame's arrival) — the retry
+        # landing there resolves the entry as expired, so every parked
+        # tail terminates in bounded time.
+        expiry = tail.start_time + (tail.n_frames - 1) * tail.period + tail.period
+        when = max(min(self.loop.now + delay, expiry), self.loop.now)
+        self.loop.schedule(
+            when,
+            partial(self._retry_parked, entry.origin_rid),
+            priority=getattr(self.loop, "PRIO_ARRIVAL", 0),
+        )
+
+    def _retry_parked(self, origin_rid: int) -> None:
+        entry = self.parked.get(origin_rid)
+        if entry is None:
+            return
+        tail = entry.tail
+        now = self.loop.now
+        # Frames whose arrival passed while parked are gone (same floor
+        # rule as fail_slice); what is still deliverable shrinks as time
+        # passes because the tail keeps its original clock.
+        arrived = math.floor((now - tail.start_time) / tail.period) + 1
+        remaining = tail.n_frames - max(0, arrived)
+        if remaining <= 0:
+            del self.parked[origin_rid]
+            self.parked_expired.append(origin_rid)
+            self.failover_map[origin_rid] = None
+            return
+        fresh = Request(
+            category=tail.category,
+            period=tail.period,
+            relative_deadline=tail.relative_deadline,
+            n_frames=remaining,
+            start_time=now + tail.period,
+        )
+        if self._try_place(fresh):
+            del self.parked[origin_rid]
+            self.parked_admitted.append(origin_rid)
+            self.failover_map[origin_rid] = fresh.request_id
+            self.reroutes += 1
+            return
+        entry.attempts += 1
+        self._schedule_retry(entry)
 
     # -- placement + admission --------------------------------------------
     def submit_request(
@@ -323,9 +644,23 @@ class ClusterScheduler:
         scheduler: the ingest gateway registers streams through the
         SAME placement/admission/lease path but delivers the frames
         itself (``DeepRT.ingest_frame``)."""
+        if self._try_place(request, external_arrivals=external_arrivals):
+            return True
+        self.dropped.append(request)
+        return False
+
+    def _try_place(
+        self, request: Request, external_arrivals: bool = False
+    ) -> bool:
+        """Placement + admission without the drop bookkeeping: shared by
+        fresh submissions (which record a drop on failure) and parked-
+        tail retries (which park again instead). Only HEALTHY slices are
+        candidates — a SUSPECT slice keeps serving what it has but takes
+        no new placements until it recovers."""
         ranked = sorted(
             ((sl.utilization(), sl.spec.name, sl)
-             for sl in self.slices.values() if sl.hosts(request)),
+             for sl in self.slices.values()
+             if sl.health == HEALTHY and sl.hosts(request)),
             key=lambda t: (t[0], t[1]),
         )
         chosen: Optional[str] = None
@@ -345,17 +680,14 @@ class ClusterScheduler:
             (request.request_id,
              tuple((name, u) for u, name, _ in ranked), chosen)
         )
-        if chosen is not None:
-            return True
-        self.dropped.append(request)
-        return False
+        return chosen is not None
 
     # -- metrics ----------------------------------------------------------
     def run(self, until: Optional[float] = None) -> None:
         self.loop.run(until)
 
     def aggregate_metrics(self) -> Dict[str, float]:
-        total = missed = jobs = shed = 0
+        total = missed = jobs = shed = lost = delivered = retries = 0
         e2e_sum = 0.0
         e2e_n = 0
         for sl in self.slices.values():
@@ -364,6 +696,9 @@ class ClusterScheduler:
             missed += m.missed_frames
             jobs += m.job_count
             shed += m.dropped_frames
+            lost += m.lost_frames
+            delivered += m.delivered_frames
+            retries += m.submit_retries
             e2e_sum += sum(m.e2e_latencies)
             e2e_n += len(m.e2e_latencies)
         return {
@@ -373,6 +708,69 @@ class ClusterScheduler:
             "jobs": jobs,
             "dropped_requests": len(self.dropped),
             "dropped_frames": shed,
+            "lost_frames": lost,
+            "ingested_frames": delivered + shed,
+            "submit_retries": retries,
             "mean_e2e_latency": e2e_sum / e2e_n if e2e_n else 0.0,
             "reroutes": self.reroutes,
+            "parked": len(self.parked),
+            "parked_admitted": len(self.parked_admitted),
+            "parked_expired": len(self.parked_expired),
         }
+
+
+def build_sim_cluster(
+    table_fn: Callable[[], ProfileTable],
+    slice_names: Sequence[str],
+    fault_plans: Optional[Dict[str, FaultPlan]] = None,
+    watchdog: Optional[WatchdogConfig] = None,
+    execution=None,
+    utilization_bound: float = 1.0,
+    loop: Optional[EventLoop] = None,
+) -> ClusterScheduler:
+    """Simulated cluster with fault injection and the health watchdog.
+
+    Every slice's ``SequentialDevice`` is wrapped in a
+    :class:`~repro.core.faults.FaultyDevice` (an empty plan for slices
+    not named in ``fault_plans``), and when ``watchdog`` is given each
+    wrapper carries a :class:`~repro.core.faults.CompletionWatchdog` plus
+    measured-completion reporting wired to the cluster's
+    ``SliceHealthMonitor`` — the exact topology the live factory
+    (``serving.batcher_bridge.build_live_cluster``) builds around
+    ``AsyncDevice``, but in virtual time, so fault scenarios that take
+    wall-clock minutes replay in milliseconds.
+
+    ``table_fn`` is called once per slice so re-profiling rescales stay
+    per-slice.
+    """
+    cluster = ClusterScheduler(loop=loop, execution=execution, watchdog=watchdog)
+    plans = dict(fault_plans or {})
+    unknown = set(plans) - set(slice_names)
+    if unknown:
+        raise ValueError(f"fault plans for unknown slices: {sorted(unknown)}")
+    for name in slice_names:
+        spec = SliceSpec(
+            name=name, table=table_fn(), utilization_bound=utilization_bound
+        )
+        wd = None
+        if watchdog is not None:
+            wd = CompletionWatchdog(
+                cluster.loop, watchdog,
+                on_overdue=partial(cluster.health.note_overdue, name),
+            )
+        device = FaultyDevice(
+            SequentialDevice(cluster.loop),
+            plans.get(name, FaultPlan()),
+            watchdog=wd,
+            on_measured=(
+                partial(cluster.health.note_complete, name)
+                if watchdog is not None else None
+            ),
+            on_submit_error=partial(cluster.health.note_submit_error, name),
+        )
+        sched = DeepRT(
+            spec.table, loop=cluster.loop, execution=execution,
+            utilization_bound=utilization_bound, device=device,
+        )
+        cluster.register(Slice(spec, cluster.loop, scheduler=sched))
+    return cluster

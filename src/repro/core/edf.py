@@ -18,6 +18,7 @@ import time as _time
 from typing import Callable, List, Optional
 
 from repro.core.bucketing import bucket
+from repro.core.faults import TransientSubmitError
 from repro.core.request import JobInstance
 from repro.core.simulator import Metrics
 
@@ -111,6 +112,9 @@ class EDFWorker:
         # max_slots rows regardless of the job's batch size.
         self.executed_rows_fn: Optional[Callable[[JobInstance], int]] = None
         self.completed_jobs: List[JobInstance] = []
+        # Backoff before re-submitting after a transient device error
+        # (seconds; virtual under EventLoop, real under WallClock).
+        self.submit_retry_delay = 0.005
         self._retry_scheduled = False  # a future-time retry is pending
         self._dispatch_pending = False  # a same-instant dispatch is pending
         # Running WCET total of queued (not yet started) jobs — O(1)
@@ -174,7 +178,24 @@ class EDFWorker:
         job.profiled_wcet = self.profiled_fn(job)
         actual = self.exec_time_fn(job)
         jb = self.job_bytes_fn(job) if self.job_bytes_fn is not None else 0.0
-        self.device.submit(job, actual, self._on_complete, job_bytes=jb)
+        try:
+            self.device.submit(job, actual, self._on_complete, job_bytes=jb)
+        except TransientSubmitError:
+            # The device refused the job without damage (driver hiccup /
+            # injected fault): the job is NOT lost and NOT failed — requeue
+            # it under its original deadline and retry after a short
+            # backoff. EDF order is preserved because the queue re-sorts.
+            self.metrics.submit_retries += 1
+            self.queued_wcet += getattr(job, "_queued_wcet", 0.0)
+            self.queue.push(job)
+            if not self._retry_scheduled:
+                self._retry_scheduled = True
+                self.loop.schedule(
+                    self.loop.now + self.submit_retry_delay,
+                    self._dispatch,
+                    priority=getattr(self.loop, "PRIO_DISPATCH", 3),
+                )
+            return
         # Host-side stall per dispatch: the microseconds spent picking +
         # launching (async devices return immediately from submit) — the
         # metric the hot-path benchmark tracks against the recorded

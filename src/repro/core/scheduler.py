@@ -203,7 +203,7 @@ class DeepRT:
         index: int,
         payload=None,
         ingest_time: Optional[float] = None,
-    ) -> Frame:
+    ) -> Optional[Frame]:
         """Deliver one frame of an admitted request AT ARRIVAL TIME.
 
         THE frame entry point — the internal periodic arrivals and the
@@ -215,6 +215,16 @@ class DeepRT:
         end-to-end latency.
         """
         now = self.loop.now
+        if getattr(self.device, "closed", False):
+            # The slice died. A frame delivered after that can never
+            # complete here (the failover tail re-admitted elsewhere
+            # serves the stream's future); feeding it to the DisBatcher
+            # would count it delivered-and-then-silently-vanished. Count
+            # it delivered AND lost so conservation stays falsifiable:
+            # completed + dropped + lost == ingested.
+            self.metrics.record_ingest()
+            self.metrics.record_lost()
+            return None
         frame = Frame(
             request_id=request.request_id,
             category=request.category,

@@ -146,6 +146,8 @@ class WallClock:
 
     def release(self) -> None:
         with self._cond:
+            if self._holds <= 0:
+                raise RuntimeError("WallClock.release() without a matching hold()")
             self._holds -= 1
             self._cond.notify_all()
 
@@ -405,6 +407,14 @@ class Metrics:
     # still complete — this is a visible degradation signal, the cue to
     # shorten windows or shed harder, never a silent overwrite).
     payload_collisions: int = 0
+    # Frames that died with their slice: either in the pipeline (delivered
+    # but never completed when the slice was failed — reconciled once by
+    # ``fail_slice``) or refused at a closed device (counted delivered AND
+    # lost, so ``ingested`` still covers them). Conservation for a drained
+    # failure run: ``completed + dropped + lost == ingested``.
+    lost_frames: int = 0
+    # Submits the EDF worker retried after a transient device error.
+    submit_retries: int = 0
 
     def record_frame(self, frame) -> None:
         self.completed_frames += 1
@@ -433,6 +443,10 @@ class Metrics:
         self.drops_by_request[request_id] = (
             self.drops_by_request.get(request_id, 0) + 1
         )
+
+    def record_lost(self, n: int = 1) -> None:
+        """``n`` delivered frames died with a failed slice."""
+        self.lost_frames += n
 
     def record_job(self, batch_size: int, bucket_size: Optional[int] = None) -> None:
         """``bucket_size`` is the executed batch-slot count; callers whose
@@ -492,8 +506,11 @@ class Metrics:
         at ``record_ingest``, i.e. scheduler arrival) + shed. The
         conservation check ``completed + dropped == ingested`` is
         FALSIFIABLE for a drained ingest-path run: it fails if the
-        scheduler ever loses a delivered frame. (Baselines that record
-        completions without the ingest path leave this at dropped-only.)
+        scheduler ever loses a delivered frame. Runs that fail slices
+        extend it to ``completed + dropped + lost == ingested`` — every
+        frame that died with a slice is counted in ``lost_frames``.
+        (Baselines that record completions without the ingest path leave
+        this at dropped-only.)
         """
         return self.delivered_frames + self.dropped_frames
 

@@ -39,6 +39,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set
 
+from repro.core.cluster import QUARANTINED
 from repro.core.request import Category, Request
 from repro.ingest.sources import FrameSource
 
@@ -77,7 +78,10 @@ class StreamSession:
 
     source: FrameSource
     request: Request
-    state: str = "pending"  # pending | active | rejected | closed
+    # pending | active | rejected | closed | failover (slice quarantined:
+    # deliveries stopped; the cluster re-admits the stream's tail as a
+    # synthetic request on a surviving slice)
+    state: str = "pending"
     slice_name: Optional[str] = None  # cluster placement (None: single)
     frames_ingested: int = 0  # bytes that arrived at the gateway
     frames_delivered: int = 0  # handed to the scheduler
@@ -103,6 +107,15 @@ class IngestGateway:
     ``policies`` maps ``Category`` -> ``ShedPolicy`` (``default_policy``
     otherwise); ``shedding=False`` disables the shedder entirely (the
     benchmark's no-shedding arm — frames then queue and miss instead).
+
+    Slice health is surfaced to sessions: the gateway subscribes to the
+    cluster's ``SliceHealthMonitor``. A QUARANTINED slice's sessions are
+    moved to ``failover`` (deliveries stop — the slice is dead and its
+    tails re-admitted elsewhere by the cluster), and a SUSPECT slice's
+    sessions shed earlier because the health monitor holds that
+    scheduler's adaptation module degraded
+    (``AdaptationModule.DEGRADED_BUDGET_TIGHTEN`` flows through the
+    ``shed_scale`` the budget already divides by).
     """
 
     def __init__(
@@ -119,6 +132,9 @@ class IngestGateway:
         self.shedding = shedding
         self.sessions: List[StreamSession] = []
         self._is_cluster = hasattr(target, "slices")
+        health = getattr(target, "health", None)
+        if self._is_cluster and health is not None:
+            health.subscribe(self._on_slice_health)
 
     # -- lifecycle --------------------------------------------------------
     def register(
@@ -195,6 +211,31 @@ class IngestGateway:
             sl.release(session.request_id)
         sched.disbatcher.remove_request(session.request)
 
+    # -- slice health ------------------------------------------------------
+    def _on_slice_health(self, name: str, old: str, new: str) -> None:
+        """SliceHealthMonitor subscriber. Fires BEFORE a quarantined
+        slice is failed, so undelivered arrivals are cancelled before
+        ``fail_slice`` reconciles the dead pipeline's lost frames."""
+        if new != QUARANTINED:
+            return  # suspect tightening is read live in _over_budget
+        for session in self.sessions:
+            if session.slice_name == name and session.state == "active":
+                self._abort(session)
+
+    def _abort(self, session: StreamSession) -> None:
+        """The session's slice died. Stop delivering: cancelled arrivals
+        never count as ingested (the bytes were never presented), frames
+        already in the dead pipeline are reconciled as ``lost`` by
+        ``fail_slice``, and the stream's deliverable tail is re-admitted
+        on a surviving slice by the cluster (as a synthetic request —
+        re-homing the live byte stream itself is the transport
+        follow-on). The dead slice's lease and DisBatcher entries are
+        left untouched: its engine is frozen."""
+        session.state = "failover"
+        for eid in session._events:
+            self.loop.cancel(eid)
+        session._events.clear()
+
     # -- placement plumbing ----------------------------------------------
     def _slice_of(self, session: StreamSession):
         if not self._is_cluster or session.slice_name is None:
@@ -265,6 +306,9 @@ class IngestGateway:
         batch_wcet = table.wcet(cat.model_id, shape, pending + 1)
         delay = device_tail + queued + window_wait + batch_wcet
         policy = self.policies.get(cat, self.default_policy)
+        # shed_scale already folds in device health: a suspect slice's
+        # adaptation module is held degraded by the health monitor, so
+        # every session on it sheds earlier without gateway special-casing.
         budget = (
             policy.budget_fraction
             * session.request.relative_deadline

@@ -34,7 +34,8 @@ arena-row leases, and failover re-admission (``core/cluster.py``).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from functools import partial
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,6 +49,12 @@ from repro.core import (
 )
 from repro.core.bucketing import arena_slots, bucket, slice_arena_slots
 from repro.core.cluster import ClusterScheduler, LiveSlice, SliceSpec
+from repro.core.faults import (
+    CompletionWatchdog,
+    FaultPlan,
+    FaultyDevice,
+    WatchdogConfig,
+)
 from repro.core.scheduler import NONRT_BATCH_CAP
 from repro.serving.async_device import AsyncDevice
 from repro.serving.engine import InferenceEngine
@@ -120,7 +127,8 @@ def _wire_live_scheduler(
     utilization_bound: float = 1.0,
     slot_aware: bool = False,
     leases: Optional[Dict[int, Tuple[str, int, Tuple[int, ...]]]] = None,
-) -> Tuple[DeepRT, AsyncDevice]:
+    device_wrap: Optional[Callable[[AsyncDevice], object]] = None,
+) -> Tuple[DeepRT, object]:
     """Wire one live DeepRT over one engine behind the device contract.
 
     Shared by the single-device ``build_live_scheduler`` and the
@@ -129,6 +137,11 @@ def _wire_live_scheduler(
     one row per admitted decode stream) instead of the synthetic
     first-``batch_size``-rows prefix; either way the SAME compiled
     program executes — batch size is data.
+
+    ``device_wrap`` interposes on the device AFTER construction but
+    BEFORE the scheduler binds to it (fault injection wraps here: the
+    scheduler then submits through the wrapper, while the wrapper
+    injects at the real AsyncDevice's dispatch-handle layer).
 
     ``leases`` (slot-aware mode) is the request_id -> (mid, seq, rows)
     map the ``LiveSlice`` maintains — shared BY REFERENCE so decode
@@ -252,6 +265,8 @@ def _wire_live_scheduler(
         return engine.dispatch(mid, shape, job.batch_size, kind, payload=payload)
 
     device = AsyncDevice(loop, dispatch_fn=dispatch_job)
+    if device_wrap is not None:
+        device = device_wrap(device)
     # exec_time under async dispatch is the busy-until ESTIMATE (the
     # profiled WCET); the device reports the real completion instant.
     sched = DeepRT(
@@ -311,6 +326,8 @@ def build_live_cluster(
     utilization_bounds: Optional[Dict[str, float]] = None,
     profile_runs: int = 5,
     nonrt_cap: int = NONRT_BATCH_CAP,
+    watchdog: Optional[WatchdogConfig] = None,
+    fault_plans: Optional[Dict[str, FaultPlan]] = None,
 ) -> Tuple[ClusterScheduler, Dict[str, LiveSlice]]:
     """Build a live multi-slice cluster: ``build_live_scheduler``, sliced.
 
@@ -328,6 +345,16 @@ def build_live_cluster(
     profiles its own compiled programs — WCETs are per-mesh).
     ``nonrt_cap``: lets callers that serve no non-RT traffic shrink the
     arena floor below ``NONRT_BATCH_CAP`` (tests, benchmarks).
+    ``watchdog``: arms the fault-tolerance loop — each slice's device
+    gets a ``CompletionWatchdog`` (per-submit deadline = WCET × slack,
+    floored by ``min_deadline``) and measured-completion reporting wired
+    to the cluster's ``SliceHealthMonitor``, which drives the
+    healthy/suspect/quarantined state machine, auto-``fail_slice`` on
+    hangs, and live WCET re-profiling. Profiling itself bypasses the
+    device, so watchdog deadlines only ever cover served jobs.
+    ``fault_plans``: per-slice-name deterministic fault injection
+    (``FaultyDevice`` wraps that slice's AsyncDevice at the
+    dispatch-handle layer — chaos tests and benchmarks only).
     """
     cats = list(categories)
     kinds = {(mid, tuple(shape)): kind for mid, shape, kind in cats}
@@ -340,8 +367,15 @@ def build_live_cluster(
             f"utilization_bounds for unknown slices {sorted(unknown)}; "
             f"slice_names = {list(slice_names)}"
         )
+    plans = dict(fault_plans or {})
+    unknown_plans = set(plans) - set(slice_names)
+    if unknown_plans:
+        raise ValueError(
+            f"fault_plans for unknown slices {sorted(unknown_plans)}; "
+            f"slice_names = {list(slice_names)}"
+        )
     loop = WallClock()
-    cluster = ClusterScheduler(loop=loop)
+    cluster = ClusterScheduler(loop=loop, watchdog=watchdog)
     slices: Dict[str, LiveSlice] = {}
     max_batch = max(*batch_sizes, nonrt_cap)
     for name in slice_names:
@@ -355,10 +389,27 @@ def build_live_cluster(
         # dispatch closure (slot-aligned payload staging) and the
         # LiveSlice (lease lifecycle).
         leases: Dict[int, Tuple[str, int, Tuple[int, ...]]] = {}
-        sched, _device = _wire_live_scheduler(
+        wrap = None
+        if name in plans:
+            wrap = partial(_wrap_faulty, plan=plans[name])
+        sched, device = _wire_live_scheduler(
             engine, table, loop, kinds,
             utilization_bound=bound, slot_aware=True, leases=leases,
+            device_wrap=wrap,
         )
+        inner = device.inner if isinstance(device, FaultyDevice) else device
+        if watchdog is not None:
+            # The watchdog lives on the REAL AsyncDevice: injected faults
+            # then look exactly like hardware misbehavior to it.
+            inner.watchdog = CompletionWatchdog(
+                loop, watchdog,
+                on_overdue=partial(cluster.health.note_overdue, name),
+            )
+            inner.on_measured = partial(cluster.health.note_complete, name)
+        if isinstance(device, FaultyDevice):
+            device.on_submit_error = partial(
+                cluster.health.note_submit_error, name
+            )
         spec = SliceSpec(name=name, table=table, utilization_bound=bound)
         sl = LiveSlice(
             spec, scheduler=sched, engine=engine, kinds=kinds, leases=leases
@@ -366,3 +417,7 @@ def build_live_cluster(
         cluster.register(sl)
         slices[name] = sl
     return cluster, slices
+
+
+def _wrap_faulty(device: AsyncDevice, plan: FaultPlan) -> FaultyDevice:
+    return FaultyDevice(device, plan)

@@ -291,7 +291,7 @@ class TestFailover:
             "survivor_allocs": slices[survivor].engine.arena(MID, SEQ_DEC).allocs,
             "survivor_live": len(slices[survivor].engine.arena(MID, SEQ_DEC).live),
         }
-        lost = cluster.fail_slice(dead)
+        parked_now = cluster.fail_slice(dead)
         dead_eng = slices[dead].engine
         dead_arena = dead_eng.arena(MID, SEQ_DEC)
         after_fail = {
@@ -303,17 +303,17 @@ class TestFailover:
         cluster.run()  # drain everything
         return dict(
             cluster=cluster, slices=slices, dead=dead, survivor=survivor,
-            victims=victims, lost=lost, at_failure=at_failure,
+            victims=victims, parked_now=parked_now, at_failure=at_failure,
             after_fail=after_fail,
         )
 
     def test_every_inflight_request_accounted(self, scenario):
         cluster = scenario["cluster"]
-        dropped_ids = {r.request_id for r in cluster.dropped}
         for rid in scenario["victims"]:
             # Each victim must appear in exactly one ledger: rerouted
-            # (failover_map -> tail id), shed (failover_map -> None, its
-            # fresh tail in dropped), or finished arriving pre-failure.
+            # (failover_map -> tail id, immediately or via the parked
+            # retry queue), expired while parked (failover_map -> None,
+            # rid in parked_expired), or finished arriving pre-failure.
             in_map = rid in cluster.failover_map
             finished = rid in cluster.finished_with_slice
             assert in_map or finished, (
@@ -321,10 +321,23 @@ class TestFailover:
             )
             assert not (in_map and finished)
             if in_map and cluster.failover_map[rid] is None:
-                assert any(
-                    t.request_id in dropped_ids for t in scenario["lost"]
-                )
+                assert rid in cluster.parked_expired
             assert rid not in cluster.placement  # no longer on the dead slice
+        # After the drain every parked tail has resolved one way:
+        assert cluster.parked == {}
+        assert len(cluster.parked_admitted) + len(cluster.parked_expired) == len(
+            scenario["parked_now"]
+        )
+
+    def test_conservation_across_failover(self, scenario):
+        # completed + shed + lost == ingested even though a slice died
+        # mid-decode with frames in its pipeline.
+        agg = scenario["cluster"].aggregate_metrics()
+        assert (
+            agg["completed_frames"] + agg["dropped_frames"] + agg["lost_frames"]
+            == agg["ingested_frames"]
+        ), agg
+        assert agg["lost_frames"] > 0  # the dead pipeline was reconciled
 
     def test_rerouted_tails_land_on_survivor_arena(self, scenario):
         cluster = scenario["cluster"]
@@ -419,3 +432,101 @@ class TestArenaIsolation:
         ids_after = [id(leaf) for leaf in jax.tree_util.tree_leaves(a0.cache)]
         assert ids_after == ids_before
         assert s0.engine.stats["decode_compiles"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Live watchdog: a wedged step quarantines its slice with no operator call
+# ---------------------------------------------------------------------------
+class TestLiveWatchdogQuarantine:
+    @pytest.fixture(scope="class")
+    def chaos(self):
+        from repro.configs.registry import tiny
+        from repro.core import (
+            FaultPlan,
+            FaultSpec,
+            STALL,
+            WatchdogConfig,
+        )
+        from repro.ingest.session import IngestGateway
+        from repro.ingest.sources import CameraSource
+
+        wd = WatchdogConfig(
+            slack=3.0, hang_slack=9.0, min_deadline=0.05,
+            suspect_after=2, quarantine_after=4,
+        )
+        plans = {"s0": FaultPlan((FaultSpec(STALL, 2),))}
+        configs = {MID: tiny(MID)}
+        cats = [(MID, (SEQ_PRE,), "prefill"), (MID, (SEQ_DEC,), "decode")]
+        cluster, slices = build_live_cluster(
+            configs, cats, slice_names=("s0", "s1"), batch_sizes=(1, 2),
+            profile_runs=2, nonrt_cap=1, watchdog=wd, fault_plans=plans,
+        )
+        gw = IngestGateway(cluster)
+        sessions = [
+            gw.register(
+                CameraSource(period=0.2, n_frames=8, payload_shape=(), seed=40 + i),
+                DEC_CAT, relative_deadline=0.4,
+            )
+            for i in range(3)
+        ]
+        assert all(s.state == "active" for s in sessions)
+        cluster.run()  # no operator intervention from here on
+        return cluster, slices, gw, sessions
+
+    def test_stalled_slice_auto_quarantined(self, chaos):
+        from repro.core import QUARANTINED
+
+        cluster, slices, _, _ = chaos
+        assert slices["s0"].health == QUARANTINED
+        assert not slices["s0"].alive
+        reasons = [r for _, name, _, new, r in cluster.health.transitions
+                   if name == "s0" and new == QUARANTINED]
+        assert reasons and "hung" in reasons[0]
+
+    def test_wedged_waiter_abandoned_not_inherited(self, chaos):
+        _, slices, _, _ = chaos
+        # The slice's device is the FaultyDevice wrapper; the REAL waiter
+        # thread underneath wedged inside the injected handle and close()
+        # had to abandon it with the join timeout.
+        inner = slices["s0"].device.inner
+        assert isinstance(inner, AsyncDevice)
+        assert inner.wedged
+        assert inner.closed
+
+    def test_dead_slice_sessions_moved_to_failover(self, chaos):
+        _, _, _, sessions = chaos
+        states = {s.slice_name: [] for s in sessions}
+        for s in sessions:
+            states[s.slice_name].append(s.state)
+        assert all(st == "failover" for st in states.get("s0", [])), states
+        assert all(st == "active" for name, lst in states.items()
+                   if name != "s0" for st in lst), states
+        assert any(s.slice_name == "s0" for s in sessions)  # non-vacuous
+        assert all(s.conserved() for s in sessions)
+
+    def test_victims_accounted_and_parked_resolved(self, chaos):
+        cluster, _, _, _ = chaos
+        # Every request the dead slice held resolved into one ledger and
+        # none still claims placement there.
+        assert list(cluster.failover_map) + cluster.finished_with_slice
+        assert all(name != "s0" for name in cluster.placement.values())
+        assert cluster.parked == {}
+        for rid, tail in cluster.failover_map.items():
+            if tail is None:
+                assert rid in cluster.parked_expired
+
+    def test_conservation_across_live_quarantine(self, chaos):
+        cluster, _, _, _ = chaos
+        agg = cluster.aggregate_metrics()
+        assert (
+            agg["completed_frames"] + agg["dropped_frames"] + agg["lost_frames"]
+            == agg["ingested_frames"]
+        ), agg
+
+    def test_survivor_zero_decode_recompiles_and_rows_recycled(self, chaos):
+        _, slices, _, _ = chaos
+        surv = slices["s1"]
+        assert surv.engine.stats["decode_compiles"] == 0
+        assert surv.leases == {}
+        arena = surv.engine.arena(MID, SEQ_DEC)
+        assert len(arena.free) == arena.max_slots
