@@ -22,18 +22,39 @@ source, or a trace replay, deadline-stamped at arrival, staged through
 the engine's double-buffered rings, with adaptation-driven load
 shedding accounted in the metrics.
 
+With ``--transport`` the cluster additionally sits behind the NETWORK
+front door (``repro.ingest.transport``): each stream becomes a
+datagram client behind a seed-derived chaotic link (drops, duplicates,
+reordering, delay), reassembled in order at the server, with
+credit-based backpressure signaled back to the client and session
+re-homing armed for slice failover.
+
     PYTHONPATH=src python examples/serve_multitenant.py [--requests 8]
     PYTHONPATH=src python examples/serve_multitenant.py --slices 2
     PYTHONPATH=src python examples/serve_multitenant.py --slices 2 --source camera
+    PYTHONPATH=src python examples/serve_multitenant.py --slices 2 --transport
 """
 import argparse
 import copy
+import json
 import sys
 
 from repro.configs.registry import tiny
 from repro.core import BATCH, Category, EventLoop, TraceSpec, generate_trace
-from repro.ingest import BurstSource, CameraSource, IngestGateway, TraceSource
-from repro.serving.batcher_bridge import build_live_cluster, build_live_scheduler
+from repro.ingest import (
+    BurstSource,
+    CameraSource,
+    IngestGateway,
+    LinkPlan,
+    SimLink,
+    TraceSource,
+    TransportSource,
+)
+from repro.serving.batcher_bridge import (
+    build_live_cluster,
+    build_live_scheduler,
+    build_live_transport,
+)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--requests", type=int, default=8)
@@ -43,6 +64,11 @@ ap.add_argument("--slices", type=int, default=1,
                 help="N > 1 serves through a live multi-slice cluster")
 ap.add_argument("--source", choices=("camera", "burst", "trace"), default=None,
                 help="stream real payload bytes through the ingest gateway")
+ap.add_argument("--transport", action="store_true",
+                help="serve through the network front door: chaotic link, "
+                     "reassembly, client backpressure (implies a cluster)")
+ap.add_argument("--chaos-seed", type=int, default=7,
+                help="seed for the per-stream LinkPlan (--transport)")
 args = ap.parse_args()
 
 arch_ids = ["granite-3-2b", "rwkv6-1.6b"]
@@ -117,6 +143,67 @@ def serve_ingest(target, engines):
               f"({bps:.0f} B/step), host_allocs={eng.staging_host_allocs}, "
               f"decode_compiles={eng.stats['decode_compiles']}")
 
+
+def serve_transport():
+    """--transport: the full networked path. Every stream is a datagram
+    client behind its own seed-derived chaotic link; the server
+    reassembles, backpressures, and (if a slice dies) re-homes."""
+    n_slices = max(2, args.slices)
+    print(f"compiling + profiling {n_slices} slices (per-slice §4.1 pass)...")
+    cluster, slices, _gateway, transport, _binding = build_live_transport(
+        configs, categories,
+        slice_names=tuple(f"slice{i}" for i in range(n_slices)),
+        record_payloads=False,
+    )
+    loop = cluster.loop
+    clients, links = [], []
+    for i, (cat, deadline, src) in enumerate(make_sources()):
+        plan = LinkPlan.from_seed(
+            args.chaos_seed + i, src.n_frames * 4,
+            p_drop=0.05, p_dup=0.05, p_reorder=0.08, p_delay=0.05,
+            reorder_hold=(0.05, 0.2),
+        )
+        link = SimLink(loop, transport.datagram, plan=plan)
+        client = TransportSource(src, cat, deadline, link)
+        ok = client.start(transport)
+        ts = transport.sessions.get(client.sid)
+        where = f" @{ts.session.slice_name}" if ok else ""
+        print(f"stream {client.sid} ({cat}): "
+              f"{'ADMIT' + where if ok else 'REJECT'}")
+        clients.append(client)
+        links.append(link)
+    print("\nserving through the chaotic link (wall clock, zero-stall)...")
+    cluster.run()
+    transport.finalize_all()
+    cluster.run(until=loop.now + 0.5)
+    snap = json.loads(transport.status_json())
+    print(f"link   : sends={sum(l.sends for l in links)} "
+          f"dropped={sum(l.dropped for l in links)} "
+          f"duplicated={sum(l.duplicated for l in links)} "
+          f"reordered={sum(l.reordered for l in links)} "
+          f"delayed={sum(l.delayed for l in links)}")
+    for sid, sess in sorted(snap["sessions"].items(), key=lambda kv: int(kv[0])):
+        w = sess["wire"]
+        print(f"  session {sid} @{sess['slice']}: received={w['received']} "
+              f"delivered={w['delivered']} dup={w['duplicates']} "
+              f"lost={w['net_lost']} late={w['late_rejected']} "
+              f"credit={sess['credit']:.2f} downshifts={sess['downshifts']} "
+              f"conserved={w['conserved']}")
+    agg = cluster.aggregate_metrics()
+    print(f"cluster: completed={agg['completed_frames']} "
+          f"missed={agg['missed_frames']} ({agg['miss_rate']:.1%}) "
+          f"shed={agg['dropped_frames']} lost={agg['lost_frames']} "
+          f"conserved={agg['completed_frames'] + agg['dropped_frames'] + agg['lost_frames'] == agg['ingested_frames']}")
+    for name, sl in slices.items():
+        print(f"  {name}: decode_compiles={sl.engine.stats['decode_compiles']} "
+              f"device_busy={sl.device.busy_time:.2f}s")
+
+
+if args.transport:
+    if args.source is None:
+        args.source = "camera"  # transport clients need payload sources
+    serve_transport()
+    sys.exit(0)
 
 if args.slices > 1:
     print(f"compiling + profiling {args.slices} slices (per-slice §4.1 pass)...")

@@ -258,6 +258,9 @@ class ParkedTail:
     tail: Request
     parked_at: float
     attempts: int = 0
+    # Transport-owned tails are re-admitted with external arrivals (the
+    # rehome owner delivers the real bytes) instead of synthetic frames.
+    external: bool = False
 
 
 class SliceHealthMonitor:
@@ -465,6 +468,15 @@ class ClusterScheduler:
         self.parked: Dict[int, ParkedTail] = {}
         self.parked_admitted: List[int] = []
         self.parked_expired: List[int] = []
+        # Session re-homing hook (the transport server registers here):
+        # an object with owns(rid) / rehomed(origin_rid, tail, slice) /
+        # expired(origin_rid). Tails it owns are re-admitted as EXTERNAL
+        # requests — the owner replays the real buffered bytes into them
+        # instead of the cluster streaming synthetic frames.
+        self.rehome_owner = None
+
+    def set_rehome_owner(self, owner) -> None:
+        self.rehome_owner = owner
 
     # -- elasticity ------------------------------------------------------
     def add_slice(self, spec: SliceSpec) -> Slice:
@@ -571,18 +583,25 @@ class ClusterScheduler:
         if in_pipeline > 0:
             m.record_lost(in_pipeline)
         parked_now: List[Request] = []
+        owner = self.rehome_owner
         for rid, tail in displaced:
-            if self._try_place(tail):
+            owned = owner is not None and owner.owns(rid)
+            if self._try_place(tail, external_arrivals=owned):
                 self.failover_map[rid] = tail.request_id
                 self.reroutes += 1
+                if owned:
+                    owner.rehomed(rid, tail, self.placement[tail.request_id])
             else:
-                self._park(rid, tail)
+                self._park(rid, tail, external=owned)
                 parked_now.append(tail)
         return parked_now
 
     # -- parked-tail retry queue ------------------------------------------
-    def _park(self, origin_rid: int, tail: Request) -> None:
-        entry = ParkedTail(origin_rid=origin_rid, tail=tail, parked_at=self.loop.now)
+    def _park(self, origin_rid: int, tail: Request, external: bool = False) -> None:
+        entry = ParkedTail(
+            origin_rid=origin_rid, tail=tail, parked_at=self.loop.now,
+            external=external,
+        )
         self.parked[origin_rid] = entry
         self._schedule_retry(entry)
 
@@ -615,10 +634,13 @@ class ClusterScheduler:
         # passes because the tail keeps its original clock.
         arrived = math.floor((now - tail.start_time) / tail.period) + 1
         remaining = tail.n_frames - max(0, arrived)
+        owner = self.rehome_owner if entry.external else None
         if remaining <= 0:
             del self.parked[origin_rid]
             self.parked_expired.append(origin_rid)
             self.failover_map[origin_rid] = None
+            if owner is not None:
+                owner.expired(origin_rid)
             return
         fresh = Request(
             category=tail.category,
@@ -627,11 +649,13 @@ class ClusterScheduler:
             n_frames=remaining,
             start_time=now + tail.period,
         )
-        if self._try_place(fresh):
+        if self._try_place(fresh, external_arrivals=entry.external):
             del self.parked[origin_rid]
             self.parked_admitted.append(origin_rid)
             self.failover_map[origin_rid] = fresh.request_id
             self.reroutes += 1
+            if owner is not None:
+                owner.rehomed(origin_rid, fresh, self.placement[fresh.request_id])
             return
         entry.attempts += 1
         self._schedule_retry(entry)

@@ -241,6 +241,14 @@ class EDFWorker:
         self._schedule_dispatch()
 
     def _on_complete(self, job: JobInstance, now: float) -> None:
+        if job.completion_time is not None:
+            # Duplicated completion signal (a retried ack — see
+            # ``faults.DUP_COMPLETE``). The first signal already recorded
+            # the job, its frames, the adaptation hooks, and any chained
+            # lease release; a second pass would double-count all of
+            # them, so the duplicate is counted and dropped here.
+            self.metrics.duplicate_completions += 1
+            return
         job.completion_time = now
         self.completed_jobs.append(job)
         # Charge the batch-slot rows that actually executed (prefill: the

@@ -42,8 +42,14 @@ DELAY = "delay"            # completion lands late (throttled accelerator)
 STALL = "stall"            # completion never lands (hung step)
 SUBMIT_ERROR = "submit_error"  # submit raises TransientSubmitError once
 DEATH = "death"            # current submit stalls AND all future submits die
+# Network-shaped completion faults: the device finishes on time but its
+# completion SIGNAL misbehaves (a retried RPC ack lands twice; an ack is
+# held in a queue and arrives after later jobs' acks).
+DUP_COMPLETE = "dup_complete"        # completion callback fires twice
+REORDER_COMPLETE = "reorder_complete"  # completion callback arrives late,
+                                       # possibly after later jobs' callbacks
 
-FAULT_KINDS = (DELAY, STALL, SUBMIT_ERROR, DEATH)
+FAULT_KINDS = (DELAY, STALL, SUBMIT_ERROR, DEATH, DUP_COMPLETE, REORDER_COMPLETE)
 
 
 @dataclass(frozen=True)
@@ -69,6 +75,11 @@ class FaultSpec:
             raise ValueError("at_submit must be >= 0")
         if self.kind == DELAY and self.factor < 1.0 and self.extra <= 0.0:
             raise ValueError("a DELAY fault must actually delay (factor >= 1 or extra > 0)")
+        if self.kind == REORDER_COMPLETE and self.factor <= 1.0 and self.extra <= 0.0:
+            raise ValueError(
+                "a REORDER_COMPLETE fault must defer the signal "
+                "(factor > 1 or extra > 0)"
+            )
 
 
 class FaultPlan:
@@ -100,15 +111,21 @@ class FaultPlan:
         p_stall: float = 0.0,
         p_error: float = 0.0,
         p_death: float = 0.0,
+        p_dup_complete: float = 0.0,
+        p_reorder_complete: float = 0.0,
         delay_factor: Tuple[float, float] = (2.0, 6.0),
         delay_extra: Tuple[float, float] = (0.0, 0.0),
     ) -> "FaultPlan":
         """Draw an independent fault (or none) for each submit index.
 
         Same seed and parameters -> identical plan, so any failure found
-        under a random plan is replayable from its seed alone.
+        under a random plan is replayable from its seed alone.  The
+        per-index draw count is branch-independent, so plans with the
+        same seed agree on their common prefix regardless of length.
         """
-        if p_delay + p_stall + p_error + p_death > 1.0:
+        total = p_delay + p_stall + p_error + p_death
+        total += p_dup_complete + p_reorder_complete
+        if total > 1.0:
             raise ValueError("fault probabilities must sum to <= 1")
         rng = random.Random(seed)
         specs = []
@@ -124,6 +141,13 @@ class FaultPlan:
                 specs.append(FaultSpec(SUBMIT_ERROR, i))
             elif r < p_delay + p_stall + p_error + p_death:
                 specs.append(FaultSpec(DEATH, i))
+            elif r < p_delay + p_stall + p_error + p_death + p_dup_complete:
+                specs.append(FaultSpec(DUP_COMPLETE, i))
+            elif r < total:
+                specs.append(
+                    FaultSpec(REORDER_COMPLETE, i,
+                              factor=max(factor, 1.0 + 1e-9), extra=extra)
+                )
         return cls(tuple(specs))
 
 
@@ -354,6 +378,13 @@ class FaultyDevice:
             self._submit_clean(job, exec_time, on_complete, job_bytes)
             return
         self.injected.append((index, spec.kind, self.loop.now))
+        if spec.kind == DUP_COMPLETE:
+            self._submit_clean(job, exec_time, self._duplicated(on_complete), job_bytes)
+            return
+        if spec.kind == REORDER_COMPLETE:
+            defer = max(exec_time * (spec.factor - 1.0), spec.extra)
+            self._submit_clean(job, exec_time, self._deferred(on_complete, defer), job_bytes)
+            return
         if spec.kind == SUBMIT_ERROR:
             if self.on_submit_error is not None:
                 self.on_submit_error()
@@ -387,6 +418,36 @@ class FaultyDevice:
             if kind == DEATH:
                 return index
         return -1
+
+    def _duplicated(self, on_complete):
+        """DUP_COMPLETE: the signal lands twice — once on time, once
+        again immediately after (a retried ack).  The device itself runs
+        the job once; only the callback repeats, so the consumer's
+        idempotency (EDF's completed-job guard) is what is under test."""
+        def wrapped(job, t) -> None:
+            on_complete(job, t)
+            def again() -> None:
+                if not self.closed:
+                    on_complete(job, t)
+            self.loop.schedule(
+                self.loop.now, again,
+                priority=getattr(self.loop, "PRIO_COMPLETE", 0),
+            )
+        return wrapped
+
+    def _deferred(self, on_complete, defer: float):
+        """REORDER_COMPLETE: the device frees on time (later jobs run and
+        complete), but THIS job's completion signal is held for ``defer``
+        seconds — it can arrive after later jobs' signals."""
+        def wrapped(job, t) -> None:
+            def late() -> None:
+                if not self.closed:
+                    on_complete(job, t)
+            self.loop.schedule(
+                self.loop.now + defer, late,
+                priority=getattr(self.loop, "PRIO_COMPLETE", 0),
+            )
+        return wrapped
 
     def _submit_clean(self, job, exec_time, on_complete, job_bytes) -> None:
         if self.is_live:

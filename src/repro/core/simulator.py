@@ -415,6 +415,10 @@ class Metrics:
     lost_frames: int = 0
     # Submits the EDF worker retried after a transient device error.
     submit_retries: int = 0
+    # Completion signals that arrived for an already-completed job
+    # (``faults.DUP_COMPLETE``): suppressed by the EDF worker's
+    # idempotency guard instead of double-counting frames/leases.
+    duplicate_completions: int = 0
 
     def record_frame(self, frame) -> None:
         self.completed_frames += 1

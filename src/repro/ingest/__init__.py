@@ -1,14 +1,31 @@
 """Streaming ingestion gateway: real frame/token ingestion in front of
-the DeepRT serving stack (sources -> sessions -> staging rings)."""
+the DeepRT serving stack (sources -> sessions -> transport -> staging
+rings)."""
 from repro.ingest.session import IngestGateway, ShedPolicy, StreamSession
 from repro.ingest.sources import (
     BurstSource,
     CameraSource,
     FramePlan,
     FrameSource,
+    PeriodicSource,
     TraceSource,
 )
 from repro.ingest.staging import StagingRing
+from repro.ingest.transport import (
+    DROP,
+    DUPLICATE,
+    LINK_DELAY,
+    LINK_FAULT_KINDS,
+    REORDER,
+    LinkFault,
+    LinkPlan,
+    SimLink,
+    TransportServer,
+    TransportSession,
+    TransportSource,
+    UdpClientLink,
+    UdpServerBinding,
+)
 
 __all__ = [
     "IngestGateway",
@@ -18,6 +35,20 @@ __all__ = [
     "CameraSource",
     "FramePlan",
     "FrameSource",
+    "PeriodicSource",
     "TraceSource",
     "StagingRing",
+    "LinkFault",
+    "LinkPlan",
+    "SimLink",
+    "TransportServer",
+    "TransportSession",
+    "TransportSource",
+    "UdpClientLink",
+    "UdpServerBinding",
+    "DROP",
+    "DUPLICATE",
+    "REORDER",
+    "LINK_DELAY",
+    "LINK_FAULT_KINDS",
 ]

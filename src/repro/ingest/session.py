@@ -86,6 +86,15 @@ class StreamSession:
     frames_ingested: int = 0  # bytes that arrived at the gateway
     frames_delivered: int = 0  # handed to the scheduler
     frames_dropped: int = 0  # shed at the gateway
+    frames_lost: int = 0  # destroyed on the wire (transport-declared)
+    # Observable backpressure state (why did a frame vanish?): the
+    # transport's flow controller updates credit/downshifts, the shedder
+    # stamps last_shed_reason, re-homing counts rehomes.
+    credit: float = 1.0  # plan_duty / current duty (1.0 = full rate)
+    downshifts: int = 0
+    last_downshift_reason: Optional[str] = None
+    last_shed_reason: Optional[str] = None
+    rehomes: int = 0
     # PENDING arrival event ids only: each delivery prunes itself on
     # fire, so close() cancels exactly the undelivered tail (cancelling
     # fired ids would leak them into the loop's cancelled-set forever).
@@ -143,6 +152,7 @@ class IngestGateway:
         category: Category,
         relative_deadline: float,
         start_in: float = 0.0,
+        schedule_arrivals: bool = True,
     ) -> StreamSession:
         """Admission-test and start one stream.
 
@@ -183,6 +193,10 @@ class IngestGateway:
             session.state = "rejected"
             return session
         session.state = "active"
+        if not schedule_arrivals:
+            # The caller (transport server) owns the frame path and
+            # pushes wire arrivals through ``deliver`` itself.
+            return session
         t0 = now + start_in
         prio = getattr(self.loop, "PRIO_ARRIVAL", 0)
         for index, plan in enumerate(source.plan()):
@@ -257,8 +271,18 @@ class IngestGateway:
         return _deliver
 
     def _on_frame(self, session: StreamSession, index: int, payload) -> None:
+        self.deliver(session, index, payload)
+
+    def deliver(self, session: StreamSession, index: int, payload) -> str:
+        """Present one frame's bytes to the gateway; returns how the
+        frame resolved: ``"delivered"`` (handed to the scheduler),
+        ``"shed"`` (dropped at the door per the shed policy), ``"lost"``
+        (accepted but the target device had just closed — counted
+        ingested AND lost by the scheduler), or ``"refused"`` (the
+        session is not active; the bytes were never presented and are
+        NOT counted ingested — the caller owns their accounting)."""
         if session.state != "active":
-            return
+            return "refused"
         session.frames_ingested += 1
         sched = self._scheduler_of(session)
         cat = session.request.category
@@ -271,16 +295,23 @@ class IngestGateway:
             )
             if not keep:
                 self._shed(session, sched, cat)
-                return
+                return "shed"
         else:
             session._shed_phase = 0
-        sched.ingest_frame(
+        frame = sched.ingest_frame(
             session.request, index, payload=payload, ingest_time=self.loop.now
         )
         session.frames_delivered += 1
+        return "delivered" if frame is not None else "lost"
 
     def _shed(self, session: StreamSession, sched, cat: Category) -> None:
         session.frames_dropped += 1
+        est = getattr(session, "_last_estimate", None)
+        session.last_shed_reason = (
+            f"over_budget: predicted {est[0]:.4f}s > budget {est[1]:.4f}s"
+            if est is not None
+            else "over_budget"
+        )
         sched.metrics.record_drop(session.request_id)
         sched.adaptation.note_shed(cat)
         sl = self._slice_of(session)
@@ -288,11 +319,16 @@ class IngestGateway:
             sl.note_dropped(session.request_id)
 
     # -- backpressure estimate -------------------------------------------
-    def _over_budget(self, session: StreamSession, sched, cat: Category) -> bool:
-        """Would this frame's predicted queueing delay blow its deadline
-        budget? Conservative sum of everything ahead of it: the device's
-        in-flight tail, all queued EDF jobs, the residue of the current
-        DisBatcher window, and the WCET of the batch it would join."""
+    def delay_estimate(
+        self, session: StreamSession, sched=None, cat: Optional[Category] = None
+    ):
+        """``(predicted_delay, budget)`` for the session's next frame —
+        the quantity the shedder thresholds on, exposed so the transport
+        flow controller can signal backpressure BEFORE frames shed."""
+        if sched is None:
+            sched = self._scheduler_of(session)
+        if cat is None:
+            cat = session.request.category
         now = self.loop.now
         table = sched.table
         shape = sched.disbatcher.shape_override(cat) or cat.shape_key
@@ -314,4 +350,13 @@ class IngestGateway:
             * session.request.relative_deadline
             / sched.adaptation.shed_scale(cat)
         )
+        return delay, budget
+
+    def _over_budget(self, session: StreamSession, sched, cat: Category) -> bool:
+        """Would this frame's predicted queueing delay blow its deadline
+        budget? Conservative sum of everything ahead of it: the device's
+        in-flight tail, all queued EDF jobs, the residue of the current
+        DisBatcher window, and the WCET of the batch it would join."""
+        delay, budget = self.delay_estimate(session, sched, cat)
+        session._last_estimate = (delay, budget)
         return delay > budget or math.isinf(delay)

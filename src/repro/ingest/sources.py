@@ -107,6 +107,16 @@ class FrameSource:
         return iter(self.plan())
 
 
+class PeriodicSource(FrameSource):
+    """Strict-periodic stream: frame i at exactly ``i * period``. The
+    declared contract with zero jitter — the transport layer's baseline
+    client and the stand-in the server builds from a HELLO's declared
+    (period, n_frames) when admission-testing a remote stream."""
+
+    def _offsets(self) -> List[float]:
+        return [i * self.period for i in range(self.n_frames)]
+
+
 class CameraSource(FrameSource):
     """Jittery periodic camera: frame i at ``i*period + U(-j, +j)`` with
     ``j = jitter_frac * period / 2`` — jitter never reorders frames and
