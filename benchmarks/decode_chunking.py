@@ -1,0 +1,218 @@
+"""Multi-step decode chunking benchmark: k-step scanned decode programs
+vs single-step dispatch, and a deadline-constrained A/B of the
+slack-chosen depth policy.
+
+Headline scenarios:
+
+- decode steps/sec vs chunk depth k in {1, 2, 4, 8}: k=1 is the
+  pipelined single-step slot-arena loop (the serving_hotpath baseline);
+  k>1 runs the scanned ``decode_chunk`` program, which removes k-1
+  host returns + dispatch decisions per k steps. Acceptance: k=8
+  sustains >= 1.25x the k=1 step rate, with ZERO decode recompiles
+  across the whole sweep after the warm-up (one compiled program per
+  (model, seq, k), like every other shape on the arena).
+- deadline-constrained A/B: the same bursty backlogged job trace served
+  by a live scheduler with chunk_depth=8 (slack-chosen depths) vs
+  chunk_depth=1 (every step its own dispatch). The chunked arm must not
+  degrade the p99 frame latency — deep chunks are only taken when every
+  fused job's slack clears the chunk WCET + margin, so tail latency is
+  protected by construction.
+
+Writes ``BENCH_decode_chunking.json`` at the repo root (plus the usual
+CSV under benchmarks/results/) so successive PRs can track the numbers.
+
+    PYTHONPATH=src python -m benchmarks.decode_chunking [--smoke]
+
+``--smoke`` (CI): tiny shapes, few steps, no root-JSON rewrite — it
+exists to catch bench bit-rot (import errors, NaN/zero throughput)
+before a perf PR needs the numbers, not to produce stable timings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import check_finite, write_csv
+from repro.configs.registry import tiny
+from repro.core import Category, Frame, JobInstance
+from repro.serving.batcher_bridge import build_live_scheduler
+from repro.serving.engine import InferenceEngine
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MID = "granite-3-2b"
+SEQ = 16
+MAX_SLOTS = 8
+DEPTHS = (1, 2, 4, 8)
+
+
+def _chunk_rate_sweep(
+    depths=DEPTHS, steps_target: int = 96, seq: int = SEQ,
+    max_slots: int = MAX_SLOTS, batch: int = 4,
+) -> Dict[int, float]:
+    """Steady-state decode steps/sec per chunk depth.
+
+    Every depth executes the SAME number of decode steps (not the same
+    number of dispatches), so the rates are directly comparable; k=1 is
+    the plain single-step dispatch loop."""
+    engine = InferenceEngine(
+        {MID: tiny(MID)}, max_slots=max_slots, chunk_depth=max(depths)
+    )
+    # Warm: compile the single-step program and every chunk program.
+    engine.execute(MID, (seq,), batch, kind="decode")
+    for k in depths:
+        if k > 1:
+            engine.execute_chunk(MID, (seq,), batch, k)
+            engine.execute_chunk(MID, (seq,), batch, k)
+    engine.reset_stats()
+
+    rates: Dict[int, float] = {}
+    for k in depths:
+        n = max(1, steps_target // k)
+        best = 0.0
+        for _rep in range(3):  # best-of-3: shrug off scheduler noise
+            t0 = time.perf_counter()
+            if k == 1:
+                for _ in range(n):
+                    h = engine.dispatch(MID, (seq,), batch, kind="decode")
+            else:
+                for _ in range(n):
+                    h = engine.decode_chunk(MID, (seq,), batch, k)
+            h.wait()  # pipelined: block once at the end
+            best = max(best, (n * k) / (time.perf_counter() - t0))
+        rates[k] = best
+        check_finite(f"decode_steps_per_sec[k={k}]", rates[k])
+    # The whole sweep reused warm programs: one per (model, seq, k).
+    assert engine.stats["decode_compiles"] == 0, engine.stats
+    return rates
+
+
+def _burst_trace(n_bursts: int, burst: int, rel_deadline: float):
+    """Deterministic bursty backlog: per burst, ``burst`` same-category
+    decode jobs released back-to-back (the queue the depth policy works
+    on). Rebuilt per arm so both arms serve identical traces."""
+    cat = Category(MID, (SEQ,))
+    return [
+        [(b, i, rel_deadline) for i in range(burst)]
+        for b in range(n_bursts)
+    ], cat
+
+
+def _deadline_arm(
+    chunk_depth: int, n_bursts: int, burst: int, rel_deadline: float,
+    drain: float,
+) -> Dict[str, float]:
+    """Serve the burst trace live; report p99 latency + misses."""
+    sched, engine, _table = build_live_scheduler(
+        {MID: tiny(MID)}, [(MID, (SEQ,), "decode")],
+        chunk_depth=chunk_depth,
+    )
+    plan, cat = _burst_trace(n_bursts, burst, rel_deadline)
+    for burst_jobs in plan:
+        now = sched.loop.now
+        for (b, i, rel) in burst_jobs:
+            f = Frame(
+                request_id=b, category=cat, index=i,
+                arrival_time=now, deadline=now + rel,
+            )
+            sched.worker.submit(JobInstance(
+                category=cat, frames=[f], release_time=now,
+                relative_deadline=rel, shape_key=(SEQ,),
+            ))
+        sched.loop.run(until=sched.loop.now + drain)
+    m = sched.metrics
+    lat = sorted(m.frame_latencies)
+    total = n_bursts * burst
+    assert m.completed_frames == total, (m.completed_frames, total)
+    return {
+        "p50_latency": float(np.percentile(lat, 50)),
+        "p99_latency": float(np.percentile(lat, 99)),
+        "missed_frames": m.missed_frames,
+        "chunk_submits": m.chunk_submits,
+        "chunked_steps": m.chunked_steps,
+        "decode_compiles_post_warmup": engine.stats["decode_compiles"],
+    }
+
+
+def main(smoke: bool = False) -> List[str]:
+    if smoke:
+        rates = _chunk_rate_sweep(depths=(1, 2, 4), steps_target=8,
+                                  max_slots=4, batch=2)
+        deadline = {
+            d: _deadline_arm(d, n_bursts=2, burst=4, rel_deadline=1.0,
+                             drain=0.3)
+            for d in (1, 4)
+        }
+        deep, base = 4, 1
+    else:
+        rates = _chunk_rate_sweep()
+        deadline = {
+            d: _deadline_arm(d, n_bursts=6, burst=8, rel_deadline=0.5,
+                             drain=0.6)
+            for d in (1, 8)
+        }
+        deep, base = 8, 1
+
+    speedup = rates[max(rates)] / rates[1]
+    chunked, single = deadline[deep], deadline[base]
+
+    result = {
+        "decode_steps_per_sec": {str(k): r for k, r in rates.items()},
+        "deepest_vs_single_speedup_x": speedup,
+        "deadline_arm": {
+            f"chunk_depth_{base}": single,
+            f"chunk_depth_{deep}": chunked,
+        },
+    }
+
+    if not smoke:
+        # Acceptance bars (the chunking PR's headline numbers).
+        assert speedup >= 1.25, (
+            f"k={max(rates)} decode rate only {speedup:.2f}x k=1"
+        )
+        assert chunked["chunk_submits"] >= 1, chunked
+        assert chunked["decode_compiles_post_warmup"] == 0, chunked
+        assert single["decode_compiles_post_warmup"] == 0, single
+        # Slack-gated depths must not degrade the deadline tail: allow
+        # a small wall-clock noise band on top of "no worse".
+        assert chunked["p99_latency"] <= single["p99_latency"] * 1.10, (
+            chunked["p99_latency"], single["p99_latency"],
+        )
+        with open(os.path.join(REPO_ROOT, "BENCH_decode_chunking.json"), "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+
+    write_csv(
+        "decode_chunking",
+        ["metric", "value"],
+        [[f"decode_steps_per_sec_k{k}", f"{r:.1f}"] for k, r in rates.items()]
+        + [["deepest_vs_single_speedup_x", f"{speedup:.3f}"]]
+        + [
+            [f"depth{d}_{key}", f"{val:.6f}" if isinstance(val, float) else val]
+            for d, arm in deadline.items()
+            for key, val in arm.items()
+        ],
+    )
+    return [
+        f"decode_chunking,steps_per_sec_k1,{rates[1]:.1f}",
+        f"decode_chunking,steps_per_sec_k{max(rates)},{rates[max(rates)]:.1f}",
+        f"decode_chunking,deepest_vs_single_speedup_x,{speedup:.3f}",
+        f"decode_chunking,chunked_p99_latency_s,{chunked['p99_latency']:.6f}",
+        f"decode_chunking,single_p99_latency_s,{single['p99_latency']:.6f}",
+        f"decode_chunking,chunk_submits,{chunked['chunk_submits']}",
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny fast run for CI bit-rot detection (no JSON rewrite)",
+    )
+    args = ap.parse_args()
+    for line in main(smoke=args.smoke):
+        print(line)

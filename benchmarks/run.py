@@ -23,6 +23,11 @@ SUITES = [
     ("fig10_adaptation", "benchmarks.adaptation"),
     ("roofline_table", "benchmarks.roofline_report"),
     ("serving_hotpath", "benchmarks.serving_hotpath"),
+    ("cluster_serving", "benchmarks.cluster_serving"),
+    ("ingest_serving", "benchmarks.ingest_serving"),
+    ("fault_tolerance", "benchmarks.fault_tolerance"),
+    ("transport_robustness", "benchmarks.transport_robustness"),
+    ("decode_chunking", "benchmarks.decode_chunking"),
 ]
 
 

@@ -92,6 +92,23 @@ def slice_arena_slots(
     return arena_slots(max(min_slots, math.ceil(utilization_bound * max_batch)))
 
 
+def chunk_depths(max_depth: int) -> List[int]:
+    """Power-of-two decode chunk depths up to ``bucket(max_depth)``: 1, 2, 4...
+
+    The canonical profiling grid for multi-step decode chunks. The engine
+    compiles ONE scanned program per (model, seq, k) for each k in this
+    ladder, the profiler measures exactly those k, and the EDF worker's
+    slack-chosen depth rounds DOWN to a member — so, like batch buckets,
+    the chunk the worker charges is the chunk the engine actually runs.
+    """
+    if max_depth <= 0:
+        return []
+    out = [1]
+    while out[-1] < bucket(max_depth):
+        out.append(out[-1] * 2)
+    return out
+
+
 def padding_fraction(true_batch: int, bucket_batch: int = 0) -> float:
     """Fraction of executed batch slots that carry no real frame."""
     bb = bucket_batch or bucket(true_batch)

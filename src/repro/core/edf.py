@@ -15,11 +15,12 @@ from __future__ import annotations
 import heapq
 import math
 import time as _time
-from typing import Callable, List, Optional
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
 
 from repro.core.bucketing import bucket
 from repro.core.faults import TransientSubmitError
-from repro.core.request import JobInstance
+from repro.core.request import ChunkJob, JobInstance
 from repro.core.simulator import Metrics
 
 
@@ -49,6 +50,12 @@ class DeadlineQueue:
         heapq.heapify(self._heap)
         return target
 
+    def remove(self, job: JobInstance) -> None:
+        """Remove a specific queued job (O(n); used when the worker fuses
+        the next k-1 same-category jobs into a decode chunk)."""
+        self._heap.remove(job)
+        heapq.heapify(self._heap)
+
     def __len__(self) -> int:
         return len(self._heap)
 
@@ -58,6 +65,69 @@ class DeadlineQueue:
     def snapshot(self) -> List[JobInstance]:
         """Jobs currently queued, in deadline order (for admission §4.2)."""
         return sorted(self._heap)
+
+
+@dataclass
+class ChunkPolicy:
+    """Slack-driven decode chunk-depth selection for the EDF worker.
+
+    When the earliest-deadline job is a chunkable decode job and the next
+    queued jobs continue the same category in deadline order, the worker
+    may fuse up to ``max(depths)`` of them into one k-step scanned
+    dispatch — IF the head job's deadline slack covers the chunk's full
+    profiled WCET plus a safety margin:
+
+        deadline(head) - now >= WCET_chunk(k) + margin
+
+    Near deadlines the rule degenerates to k=1 (plain dispatch); with
+    ample slack it picks the deepest profiled depth the queue run-length
+    supports. The fused jobs are CONSECUTIVE in deadline order, so EDF
+    order is never inverted — a chunk only delays jobs that would have
+    waited behind its members anyway, and only by slack the rule proved
+    the head could spare. Every inner job's own deadline must also clear
+    the chunk (inner deadlines >= head's, head's clears by construction,
+    but later members released in the same windows are re-checked so a
+    tight straggler degrades the depth rather than miss).
+    """
+
+    # job -> True when the category has a chunked program family.
+    eligible_fn: Callable[[JobInstance], bool]
+    # job -> profiled chunk depths, ascending (must include 1).
+    depths_fn: Callable[[JobInstance], List[int]]
+    # (job, k) -> profiled WCET of the k-step chunk.
+    wcet_fn: Callable[[JobInstance, int], float]
+    # job -> safety margin (seconds) the slack must clear on top of the
+    # chunk WCET. Default policy: one 1-step WCET of headroom.
+    margin_fn: Callable[[JobInstance], float]
+
+    @classmethod
+    def from_table(cls, table, margin_steps: float = 1.0) -> "ChunkPolicy":
+        """The standard policy over a ProfileTable's chunk families.
+
+        ``margin_steps`` scales the safety margin in units of the
+        category's 1-step WCET (default: one step of headroom, so a
+        chunk never eats the last step's worth of slack).
+        """
+
+        def eligible(job: JobInstance) -> bool:
+            return job.category.realtime and table.has_chunks(
+                job.category.model_id, job.shape_key
+            )
+
+        def depths(job: JobInstance) -> List[int]:
+            return table.chunk_depths_profiled(job.category.model_id, job.shape_key)
+
+        def wcet(job: JobInstance, k: int) -> float:
+            return table.chunk_wcet(job.category.model_id, job.shape_key, k)
+
+        def margin(job: JobInstance) -> float:
+            return margin_steps * table.wcet(
+                job.category.model_id, job.shape_key, job.batch_size
+            )
+
+        return cls(
+            eligible_fn=eligible, depths_fn=depths, wcet_fn=wcet, margin_fn=margin
+        )
 
 
 class EDFWorker:
@@ -122,6 +192,12 @@ class EDFWorker:
         # decision (summing the queue per arriving frame would be
         # O(queue) on the arrival hot path).
         self.queued_wcet = 0.0
+        # Multi-step decode chunking (None = disabled, always k=1).
+        self.chunk_policy: Optional[ChunkPolicy] = None
+        # (dispatch time, chosen depth, head job_id) per fused dispatch —
+        # the determinism harness compares this sequence across the
+        # simulated and live substrates.
+        self.chunk_log: List[Tuple[float, int, int]] = []
 
     # ----- queue interface (DisBatcher emit target) ---------------------
     def submit(self, job: JobInstance) -> None:
@@ -174,8 +250,16 @@ class EDFWorker:
         self.queued_wcet = max(
             0.0, self.queued_wcet - getattr(job, "_queued_wcet", 0.0)
         )
+        if self.chunk_policy is not None:
+            job = self._maybe_chunk(job)
         job.start_time = self.loop.now
         job.profiled_wcet = self.profiled_fn(job)
+        if isinstance(job, ChunkJob):
+            # Inner jobs share the chunk's start instant; their per-step
+            # WCETs stay the 1-step table values (per-frame accounting).
+            for inner in job.jobs:
+                inner.start_time = job.start_time
+                inner.profiled_wcet = self.profiled_fn(inner)
         actual = self.exec_time_fn(job)
         jb = self.job_bytes_fn(job) if self.job_bytes_fn is not None else 0.0
         try:
@@ -185,9 +269,16 @@ class EDFWorker:
             # injected fault): the job is NOT lost and NOT failed — requeue
             # it under its original deadline and retry after a short
             # backoff. EDF order is preserved because the queue re-sorts.
+            # A refused chunk is UNFUSED first: its members re-enter the
+            # queue individually, so the retry re-evaluates depth against
+            # the slack remaining after the backoff.
             self.metrics.submit_retries += 1
-            self.queued_wcet += getattr(job, "_queued_wcet", 0.0)
-            self.queue.push(job)
+            members = job.jobs if isinstance(job, ChunkJob) else [job]
+            for m in members:
+                m.start_time = None
+                m.profiled_wcet = None
+                self.queued_wcet += getattr(m, "_queued_wcet", 0.0)
+                self.queue.push(m)
             if not self._retry_scheduled:
                 self._retry_scheduled = True
                 self.loop.schedule(
@@ -196,11 +287,62 @@ class EDFWorker:
                     priority=getattr(self.loop, "PRIO_DISPATCH", 3),
                 )
             return
+        if isinstance(job, ChunkJob) and job.k > 1:
+            self.metrics.chunk_submits += 1
+            self.metrics.chunked_steps += job.k
         # Host-side stall per dispatch: the microseconds spent picking +
         # launching (async devices return immediately from submit) — the
         # metric the hot-path benchmark tracks against the recorded
         # legacy-blocking numbers.
         self.metrics.record_dispatch_overhead(_time.perf_counter() - t_host)
+
+    def _maybe_chunk(self, head: JobInstance):
+        """Fuse the picked job with the next queued same-category jobs
+        into a k-step decode chunk, depth chosen from deadline slack.
+
+        Returns the (possibly depth-1) ChunkJob for eligible decode jobs
+        — so the dispatch path is uniform and the decision is logged —
+        or the plain job when the category has no chunk family. Only
+        CONSECUTIVE earliest-deadline queued jobs are taken: the scan
+        over the deadline-ordered snapshot stops at the first job of a
+        different category, so fusing never leapfrogs a tighter job of
+        another stream.
+        """
+        pol = self.chunk_policy
+        if not pol.eligible_fn(head):
+            return head
+        depths = pol.depths_fn(head)
+        if not depths:
+            return head
+        now = self.loop.now
+        run = [head]
+        max_depth = max(depths)
+        for j in self.queue.snapshot():
+            if len(run) >= max_depth:
+                break
+            if j.category != head.category or not pol.eligible_fn(j):
+                break
+            run.append(j)
+        chosen = 1
+        for d in depths:
+            if d > len(run):
+                break
+            w = pol.wcet_fn(head, d)
+            if not math.isfinite(w):
+                break
+            need = w + pol.margin_fn(head)
+            # Every member of the candidate chunk must clear it — the
+            # head (earliest deadline) usually binds, but a member with
+            # a tight deadline released late degrades the depth.
+            if all(j.deadline - now >= need - 1e-12 for j in run[:d]):
+                chosen = d
+        self.chunk_log.append((now, chosen, head.job_id))
+        for extra in run[1:chosen]:
+            self.queue.remove(extra)
+            self.queued_wcet = max(
+                0.0, self.queued_wcet - getattr(extra, "_queued_wcet", 0.0)
+            )
+        return ChunkJob(run[:chosen])
 
     def _pick_job(self) -> Optional[JobInstance]:
         """EDF pop, with a background-server guard for non-RT jobs.
@@ -250,22 +392,48 @@ class EDFWorker:
             self.metrics.duplicate_completions += 1
             return
         job.completion_time = now
-        self.completed_jobs.append(job)
-        # Charge the batch-slot rows that actually executed (prefill: the
-        # power-of-two bucket; arena decode: max_slots, via the bridge's
-        # executed_rows_fn override).
-        rows = (
-            self.executed_rows_fn(job)
-            if self.executed_rows_fn is not None
-            else bucket(job.batch_size)
-        )
-        self.metrics.record_job(job.batch_size, rows)
-        for f in job.frames:
-            f.completion_time = now
-            self.metrics.record_frame(f)
         actual = now - job.start_time
-        if self.on_job_complete is not None:
-            self.on_job_complete(job, actual)
+        if isinstance(job, ChunkJob):
+            # Fan the single device completion back out to the chunk's
+            # member jobs IN ORDER: each keeps its own frames, deadlines,
+            # and adaptation attribution. The per-member actual is the
+            # chunk's even per-step share — the adaptation module
+            # compares it against the 1-step table WCET, and charging a
+            # member the whole chunk time would register a k× phantom
+            # overrun on every fused dispatch.
+            share = actual / job.k
+            for inner in job.jobs:
+                inner.completion_time = now
+                self.completed_jobs.append(inner)
+                rows = (
+                    self.executed_rows_fn(inner)
+                    if self.executed_rows_fn is not None
+                    else bucket(inner.batch_size)
+                )
+                self.metrics.record_job(inner.batch_size, rows)
+                for f in inner.frames:
+                    f.completion_time = now
+                    self.metrics.record_frame(f)
+                if self.on_job_complete is not None:
+                    self.on_job_complete(inner, share)
+            # Overrun/underrun is judged ONCE, chunk actual vs chunk
+            # WCET (attributed to the head member below).
+        else:
+            self.completed_jobs.append(job)
+            # Charge the batch-slot rows that actually executed (prefill:
+            # the power-of-two bucket; arena decode: max_slots, via the
+            # bridge's executed_rows_fn override).
+            rows = (
+                self.executed_rows_fn(job)
+                if self.executed_rows_fn is not None
+                else bucket(job.batch_size)
+            )
+            self.metrics.record_job(job.batch_size, rows)
+            for f in job.frames:
+                f.completion_time = now
+                self.metrics.record_frame(f)
+            if self.on_job_complete is not None:
+                self.on_job_complete(job, actual)
         if job.profiled_wcet is not None:
             if actual > job.profiled_wcet + 1e-9:
                 self.metrics.overruns += 1

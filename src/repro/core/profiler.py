@@ -71,6 +71,13 @@ class ProfileTable:
     entries: Dict[TableKey, Dict[int, float]] = field(default_factory=dict)
     # (model_id, shape_key) -> (max_slots, seconds): flat decode entries.
     flat_entries: Dict[TableKey, Tuple[int, float]] = field(default_factory=dict)
+    # (model_id, shape_key) -> {chunk depth k: seconds}: the flat WCET
+    # FAMILY of a decode category's k-step chunked programs. k=1 mirrors
+    # the flat entry; deeper k amortize per-dispatch host overhead, so
+    # WCET_k < k * WCET_1 on real hardware — but the family must stay
+    # monotone in k (a deeper chunk never finishes before a shallower
+    # one), which ``record_flat`` enforces at record time.
+    chunk_entries: Dict[TableKey, Dict[int, float]] = field(default_factory=dict)
     # Multiplies every lookup; the cluster layer uses it to model degraded
     # capacity (e.g. a straggling or partially failed slice).
     capacity_scale: float = 1.0
@@ -83,15 +90,51 @@ class ProfileTable:
         self.entries.setdefault((model_id, tuple(shape_key)), {})[batch_size] = wcet
 
     def record_flat(
-        self, model_id: str, shape_key: ShapeKey, wcet: float, max_slots: int
+        self,
+        model_id: str,
+        shape_key: ShapeKey,
+        wcet: float,
+        max_slots: int,
+        k: int = 1,
     ) -> None:
         """Record a slot-arena decode category: one WCET (measured with
-        every arena row active — the worst case) for any batch size."""
+        every arena row active — the worst case) for any batch size.
+
+        ``k`` records the WCET of the k-step CHUNKED program (one scanned
+        dispatch executing k decode steps). k=1 is the base flat entry;
+        every k also lands in the chunk family, monotone-checked: WCET
+        must be non-decreasing in k, and WCET_k <= k * WCET_1 would be
+        nice but is NOT required (a cold measurement may exceed it) —
+        only ordering violations are rejected, because a non-monotone
+        family would let the slack rule pick a deeper chunk believing it
+        cheaper than a shallower one.
+        """
         if wcet <= 0:
             raise ValueError(f"wcet must be positive, got {wcet}")
         if max_slots <= 0:
             raise ValueError(f"max_slots must be positive, got {max_slots}")
-        self.flat_entries[(model_id, tuple(shape_key))] = (max_slots, wcet)
+        if k <= 0:
+            raise ValueError(f"chunk depth must be positive, got {k}")
+        key = (model_id, tuple(shape_key))
+        family = self.chunk_entries.setdefault(key, {})
+        for k2, w2 in family.items():
+            if k2 < k and w2 > wcet + 1e-12:
+                raise ValueError(
+                    f"non-monotone chunk family for {key}: "
+                    f"WCET({k2})={w2} > WCET({k})={wcet}"
+                )
+            if k2 > k and w2 < wcet - 1e-12:
+                raise ValueError(
+                    f"non-monotone chunk family for {key}: "
+                    f"WCET({k2})={w2} < WCET({k})={wcet}"
+                )
+        family[k] = wcet
+        if k == 1:
+            self.flat_entries[key] = (max_slots, wcet)
+        elif key not in self.flat_entries:
+            raise ValueError(
+                f"chunk depth {k} recorded before the k=1 base entry for {key}"
+            )
 
     def has(self, model_id: str, shape_key: ShapeKey) -> bool:
         key = (model_id, tuple(shape_key))
@@ -183,11 +226,59 @@ class ProfileTable:
             return self.flat_entries[key][0]
         return max(self.entries[key])
 
+    # -- chunk families ------------------------------------------------
+    def chunk_wcet(self, model_id: str, shape_key: ShapeKey, k: int) -> float:
+        """Conservative WCET for a k-step decode chunk.
+
+        Exact hit when k was profiled; an unprofiled k rounds UP to the
+        next profiled depth (running a deeper chunk's program for fewer
+        steps never happens — the worker rounds depths DOWN to profiled
+        members — so this path only covers direct table queries); beyond
+        the family it falls back to ``k * WCET_1``, the no-amortization
+        upper bound.
+        """
+        if k <= 0:
+            return 0.0
+        key = (model_id, tuple(shape_key))
+        family = self.chunk_entries.get(key)
+        if family:
+            if k in family:
+                return family[k] * self.capacity_scale
+            deeper = [k2 for k2 in family if k2 > k]
+            if deeper:
+                return family[min(deeper)] * self.capacity_scale
+        if key not in self.flat_entries:
+            raise KeyError(
+                f"no flat/chunk profile for model={model_id} shape={shape_key}"
+            )
+        return k * self.flat_entries[key][1] * self.capacity_scale
+
+    def chunk_depths_profiled(self, model_id: str, shape_key: ShapeKey) -> List[int]:
+        """Profiled chunk depths for a decode category, ascending.
+
+        Depths the engine has a compiled-and-measured program for; the
+        EDF worker's slack rule only ever picks from this list."""
+        key = (model_id, tuple(shape_key))
+        return sorted(self.chunk_entries.get(key, ()))
+
+    def has_chunks(self, model_id: str, shape_key: ShapeKey) -> bool:
+        """True when a depth > 1 chunk program was profiled for this key."""
+        key = (model_id, tuple(shape_key))
+        return any(k > 1 for k in self.chunk_entries.get(key, ()))
+
+    def has_any_chunks(self) -> bool:
+        """True when ANY category carries a depth > 1 chunk family —
+        the signal DeepRT uses to auto-enable chunked dispatch."""
+        return any(
+            any(k > 1 for k in family) for family in self.chunk_entries.values()
+        )
+
     def scaled(self, factor: float) -> "ProfileTable":
         """A view of this table with capacity degraded by ``factor`` >= 1."""
         return ProfileTable(
             entries=self.entries,
             flat_entries=self.flat_entries,
+            chunk_entries=self.chunk_entries,
             capacity_scale=self.capacity_scale * factor,
         )
 
@@ -214,6 +305,16 @@ class ProfileTable:
                     self.flat_entries.items()
                 )
             ],
+            "chunk_entries": [
+                {
+                    "model_id": model_id,
+                    "shape_key": list(shape_key),
+                    "table": {str(k): t for k, t in sorted(family.items())},
+                }
+                for (model_id, shape_key), family in sorted(
+                    self.chunk_entries.items()
+                )
+            ],
         }
         return json.dumps(blob, indent=1)
 
@@ -229,6 +330,16 @@ class ProfileTable:
                 e["model_id"], tuple(e["shape_key"]), float(e["wcet"]),
                 int(e["max_slots"]),
             )
+        for e in blob.get("chunk_entries", []):
+            key = (e["model_id"], tuple(e["shape_key"]))
+            slots = table.flat_entries.get(key, (0,))[0]
+            for k, t in sorted(e["table"].items(), key=lambda kv: int(kv[0])):
+                if int(k) == 1:
+                    continue  # already restored via flat_entries
+                table.record_flat(
+                    e["model_id"], tuple(e["shape_key"]), float(t), slots,
+                    k=int(k),
+                )
         return table
 
 

@@ -161,6 +161,74 @@ class JobInstance:
         return (self.deadline, self.job_id) < (other.deadline, other.job_id)
 
 
+class ChunkJob:
+    """An ordered run of same-category decode job instances fused into ONE
+    device dispatch (a k-step scanned decode program, ``serving/engine.py``).
+
+    Built by the EDF worker at dispatch time (never queued): the worker
+    pops the earliest-deadline decode job plus the next k-1 queued jobs of
+    the same category — consecutive in deadline order, so fusing them
+    reorders nothing — and submits the chunk as a single unit whose
+    profiled WCET is the k-step family value from the ProfileTable. Inner
+    jobs keep their own deadlines and frames; completion fans back out to
+    each of them in order.
+    """
+
+    __slots__ = (
+        "jobs", "start_time", "completion_time", "profiled_wcet", "_queued_wcet"
+    )
+
+    def __init__(self, jobs: list):
+        if not jobs:
+            raise ValueError("a chunk needs at least one job")
+        head = jobs[0]
+        for j in jobs[1:]:
+            if j.category is not head.category and j.category != head.category:
+                raise ValueError("chunked jobs must share one category")
+        self.jobs = list(jobs)
+        self.start_time: Optional[float] = None
+        self.completion_time: Optional[float] = None
+        self.profiled_wcet: Optional[float] = None
+        self._queued_wcet = 0.0
+
+    @property
+    def k(self) -> int:
+        """Chunk depth: decode steps executed by the single dispatch."""
+        return len(self.jobs)
+
+    @property
+    def category(self) -> Category:
+        return self.jobs[0].category
+
+    @property
+    def shape_key(self) -> Tuple[int, ...]:
+        return self.jobs[0].shape_key
+
+    @property
+    def job_id(self) -> int:
+        return self.jobs[0].job_id
+
+    @property
+    def release_time(self) -> float:
+        return self.jobs[0].release_time
+
+    @property
+    def deadline(self) -> float:
+        """The head job's deadline — the earliest in the run (EDF order)."""
+        return self.jobs[0].deadline
+
+    @property
+    def batch_size(self) -> int:
+        """Widest per-step frame count (the arena executes max_slots rows
+        regardless; this feeds bucket-accounting fallbacks only)."""
+        return max(j.batch_size for j in self.jobs)
+
+    @property
+    def frames(self) -> list:
+        """All frames across the chunk's steps, in execution order."""
+        return [f for j in self.jobs for f in j.frames]
+
+
 @dataclass
 class PseudoJob:
     """A virtual job instance used by admission control (paper §4.2, step 2).

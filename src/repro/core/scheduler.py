@@ -30,9 +30,9 @@ from repro.core.admission import (
     snapshot_from_scheduler,
 )
 from repro.core.disbatcher import DisBatcher
-from repro.core.edf import EDFWorker
+from repro.core.edf import ChunkPolicy, EDFWorker
 from repro.core.profiler import ProfileTable
-from repro.core.request import Category, Frame, JobInstance, Request
+from repro.core.request import Category, ChunkJob, Frame, JobInstance, Request
 from repro.core.simulator import EventLoop, Metrics, SequentialDevice
 
 NONRT_MIN_PERIOD = 1.0  # imposed arrival period for non-RT requests (§3.3)
@@ -116,11 +116,27 @@ class DeepRT:
             table, self.disbatcher, shrink_fn=shrink_fn, enabled=adaptation_enabled
         )
         self.worker.on_job_complete = self.adaptation.on_job_complete
+        # Multi-step decode chunking auto-enables when the table carries a
+        # chunk family for any category (i.e. the engine was profiled per
+        # depth). Both substrates key off the same table state, so a
+        # simulated DeepRT and its live twin make identical depth choices
+        # on identical traces — the determinism property the differential
+        # harness asserts.
+        if table.has_any_chunks():
+            self.worker.chunk_policy = ChunkPolicy.from_table(table)
         self.admitted: List[Request] = []
         self.rejected: List[Request] = []
 
     # ----- execution-time plumbing ---------------------------------------
-    def _profiled(self, job: JobInstance) -> float:
+    def _profiled(self, job) -> float:
+        if isinstance(job, ChunkJob):
+            # The fused dispatch charges the k-step family WCET — to
+            # busy_until, the watchdog's expected time, and (via the
+            # worker's queued-WCET total before fusing) the gateway's
+            # delay estimate.
+            return self.table.chunk_wcet(
+                job.category.model_id, job.shape_key, job.k
+            )
         return self.table.wcet(job.category.model_id, job.shape_key, job.batch_size)
 
     def _exec_time(self, job: JobInstance) -> float:

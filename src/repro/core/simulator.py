@@ -419,6 +419,12 @@ class Metrics:
     # (``faults.DUP_COMPLETE``): suppressed by the EDF worker's
     # idempotency guard instead of double-counting frames/leases.
     duplicate_completions: int = 0
+    # Multi-step decode chunking (``EDFWorker.chunk_policy``): fused
+    # dispatches of depth >= 2, and the total decode steps they carried.
+    # ``chunked_steps / chunk_submits`` is the mean depth the slack rule
+    # actually achieved — the amortization the benchmark measures.
+    chunk_submits: int = 0
+    chunked_steps: int = 0
 
     def record_frame(self, frame) -> None:
         self.completed_frames += 1

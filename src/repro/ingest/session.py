@@ -94,6 +94,10 @@ class StreamSession:
     downshifts: int = 0
     last_downshift_reason: Optional[str] = None
     last_shed_reason: Optional[str] = None
+    # Per-term breakdown of the most recent delay estimate (device tail
+    # incl. any in-flight chunk residue, queued WCET, window wait, batch
+    # WCET) — stamped by ``IngestGateway.delay_estimate``.
+    last_delay_breakdown: Optional[Dict[str, float]] = None
     rehomes: int = 0
     # PENDING arrival event ids only: each delivery prunes itself on
     # fire, so close() cancels exactly the undelivered tail (cancelling
@@ -324,7 +328,18 @@ class IngestGateway:
     ):
         """``(predicted_delay, budget)`` for the session's next frame —
         the quantity the shedder thresholds on, exposed so the transport
-        flow controller can signal backpressure BEFORE frames shed."""
+        flow controller can signal backpressure BEFORE frames shed.
+
+        ``device_tail`` is the in-flight job's remaining occupancy from
+        the device's ``busy_until``. When that job is a multi-step
+        decode chunk, the EDF worker charged the chunk's FULL k-step
+        WCET at submit, so the window residue of an in-flight chunk
+        counts here automatically — without it, a deep chunk would look
+        like a 1-step device tail and CREDIT downshifts would fire k
+        steps late. The per-term breakdown of the most recent estimate
+        is kept on ``session.last_delay_breakdown`` for observability
+        (which term tripped a shed / downshift).
+        """
         if sched is None:
             sched = self._scheduler_of(session)
         if cat is None:
@@ -341,6 +356,12 @@ class IngestGateway:
         window_wait = max(0.0, next_joint - now) if next_joint is not None else 0.0
         batch_wcet = table.wcet(cat.model_id, shape, pending + 1)
         delay = device_tail + queued + window_wait + batch_wcet
+        session.last_delay_breakdown = {
+            "device_tail": device_tail,
+            "queued_wcet": queued,
+            "window_wait": window_wait,
+            "batch_wcet": batch_wcet,
+        }
         policy = self.policies.get(cat, self.default_policy)
         # shed_scale already folds in device health: a suspect slice's
         # adaptation module is held degraded by the health monitor, so

@@ -97,6 +97,21 @@ class StagingRing:
         """Bytes uploaded per fill (one staged program input)."""
         return int(self._scratch[0].nbytes)
 
+    @property
+    def capacity(self) -> int:
+        """Stages that may be in flight behind ONE consumer: depth - 1.
+
+        A multi-step decode chunk stages one ring slot per step and
+        attaches the SAME consumer (the chunk's completion) to each, so
+        a k-step chunk needs ``k <= capacity`` — were k to reach depth,
+        the k-th stage would wrap onto a slot whose guard is the chunk's
+        own not-yet-dispatched wait and deadlock (or worse, overwrite a
+        sibling step's bytes on a zero-copy backend). The engine sizes
+        decode rings to ``max_chunk_depth + 1`` and validates against
+        this property at dispatch.
+        """
+        return self.depth - 1
+
     def stage(self, fill_fn: Callable[[np.ndarray], None]) -> jax.Array:
         """Fill the next scratch buffer in place and upload it.
 

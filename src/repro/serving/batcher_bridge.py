@@ -47,7 +47,12 @@ from repro.core import (
     ProfileTable,
     WallClock,
 )
-from repro.core.bucketing import arena_slots, bucket, slice_arena_slots
+from repro.core.bucketing import (
+    arena_slots,
+    bucket,
+    chunk_depths,
+    slice_arena_slots,
+)
 from repro.core.cluster import ClusterScheduler, LiveSlice, SliceSpec
 from repro.core.faults import (
     CompletionWatchdog,
@@ -55,6 +60,7 @@ from repro.core.faults import (
     FaultyDevice,
     WatchdogConfig,
 )
+from repro.core.request import ChunkJob
 from repro.core.scheduler import NONRT_BATCH_CAP
 from repro.serving.async_device import AsyncDevice
 from repro.serving.engine import InferenceEngine
@@ -66,6 +72,7 @@ def profile_engine(
     batch_sizes=(1, 2, 4, 8),
     runs: int = 5,
     quantile: float = 0.99,
+    chunk_depth: int = 1,
 ) -> ProfileTable:
     """Offline profiler pass (paper §4.1): p99 over repeated runs.
 
@@ -74,6 +81,16 @@ def profile_engine(
     slot arena runs one program whose cost is flat in batch size, so a
     per-batch curve would time the same program repeatedly; measure the
     worst case (all ``max_slots`` rows live) once and record it flat.
+
+    ``chunk_depth`` > 1 additionally profiles each decode category's
+    k-step chunked programs over the power-of-two depth ladder
+    (``bucketing.chunk_depths``), recording the per-depth flat WCET
+    family (``record_flat(..., k=k)``) that the EDF worker's slack rule
+    consumes. Measuring here is also the WARM-UP: every chunk program
+    the worker can later choose is compiled during profiling, so serving
+    stays at zero decode recompiles. Raw per-depth measurements are
+    clamped monotone non-decreasing in k before recording (timer jitter
+    on near-equal depths must not read as a family inversion).
     """
     cats = list(categories)
     # ProfileTable keys (and the bridge's kind_of map) are (model, shape)
@@ -108,6 +125,29 @@ def profile_engine(
             )
             wcet = probe.entries[(mid, tuple(shape_key))][engine.max_slots]
             table.record_flat(mid, shape_key, wcet, engine.max_slots)
+            if chunk_depth > 1:
+                depth = min(chunk_depth, engine.max_chunk_depth)
+                prev = 0.0
+                for k in chunk_depths(depth):
+                    probe_k = ProfileTable()
+                    profiler.profile(
+                        probe_k,
+                        mid,
+                        shape_key,
+                        [engine.max_slots],
+                        lambda b, _m=mid, _s=shape_key, _k=k: (
+                            engine.execute_chunk(_m, _s, b, _k)
+                        ),
+                        bucketed=False,
+                    )
+                    w = probe_k.entries[(mid, tuple(shape_key))][
+                        engine.max_slots
+                    ]
+                    w = max(w, prev)
+                    table.record_flat(
+                        mid, shape_key, w, engine.max_slots, k=k
+                    )
+                    prev = w
         else:
             profiler.profile(
                 table,
@@ -195,8 +235,10 @@ def _wire_live_scheduler(
         return out or None
 
     def job_bytes(job) -> float:
+        steps = job.k if isinstance(job, ChunkJob) else 1
         return engine.job_bytes(
-            job.category.model_id, job.shape_key, job.batch_size, kind_of(job)
+            job.category.model_id, job.shape_key, job.batch_size,
+            kind_of(job), steps=steps,
         )
 
     def executed_rows(job) -> int:
@@ -228,6 +270,41 @@ def _wire_live_scheduler(
     def dispatch_job(job):
         mid, shape = job.category.model_id, job.shape_key
         kind = kind_of(job)
+        if isinstance(job, ChunkJob):
+            # A fused k-step decode chunk: ONE scanned dispatch, with
+            # each member job's payload staged as its own step (one
+            # staging-ring slot per step) and each step's frame-bearing
+            # rows masked per member — the idle-row semantics of
+            # single-step ``step_rows``, held per step.
+            if kind != "decode":
+                raise RuntimeError(
+                    f"chunked dispatch for non-decode category {mid}/{shape}"
+                )
+            seq = shape[0]
+            if slot_aware:
+                live = engine.arena(mid, seq).live
+                if live:
+                    return engine.decode_chunk(
+                        mid, shape, len(live), job.k, slots=live,
+                        payloads=[
+                            slot_payload(j, mid, seq) for j in job.jobs
+                        ],
+                        step_rows=[
+                            frame_rows(j, mid, seq) for j in job.jobs
+                        ],
+                    )
+            for j in job.jobs:
+                if job_payload(j) is not None and leases is None:
+                    raise RuntimeError(
+                        f"decode chunk for {mid}/{shape} carries real "
+                        f"payload but no arena leases: ingest decode "
+                        f"streams through build_live_cluster "
+                        f"(slot-aware), not the prefix path"
+                    )
+            # No leased rows left (streams closed with frames queued):
+            # drain the chunk as a zero-payload prefix dispatch.
+            b = min(max(j.batch_size for j in job.jobs), engine.max_slots)
+            return engine.decode_chunk(mid, shape, b, job.k)
         if slot_aware and kind == "decode":
             live = engine.arena(mid, shape[0]).live
             if live:
@@ -292,6 +369,7 @@ def build_live_scheduler(
     batch_sizes=(1, 2, 4, 8),
     utilization_bound: float = 1.0,
     engine: Optional[InferenceEngine] = None,
+    chunk_depth: int = 1,
 ) -> Tuple[DeepRT, InferenceEngine, ProfileTable]:
     """Build the live wall-clock DeepRT over a compiled engine.
 
@@ -299,6 +377,11 @@ def build_live_scheduler(
     the AsyncDevice measures reality. The engine's decode arena is sized
     to the largest requested batch (``arena_slots``), so every admitted
     job fits the one resident program.
+
+    ``chunk_depth`` > 1 enables multi-step decode chunking: the engine
+    is built to serve chunks that deep, every depth on the ladder is
+    profiled into the table's chunk family, and DeepRT auto-wires the
+    EDF worker's slack-driven depth policy off that family.
     """
     if engine is None:
         # Non-RT requests bypass admission (their batches are bounded by
@@ -306,11 +389,13 @@ def build_live_scheduler(
         # that cap too — RT oversubscription is rejected at admission via
         # the flat table's inf beyond max_slots.
         engine = InferenceEngine(
-            configs, max_slots=arena_slots(max(*batch_sizes, NONRT_BATCH_CAP))
+            configs,
+            max_slots=arena_slots(max(*batch_sizes, NONRT_BATCH_CAP)),
+            chunk_depth=chunk_depth,
         )
     cats = list(categories)
     kinds = {(mid, tuple(shape)): kind for mid, shape, kind in cats}
-    table = profile_engine(engine, cats, batch_sizes)
+    table = profile_engine(engine, cats, batch_sizes, chunk_depth=chunk_depth)
     engine.reset_stats()  # stats cover served traffic, not profiling
     sched, _device = _wire_live_scheduler(
         engine, table, WallClock(), kinds, utilization_bound
@@ -328,6 +413,7 @@ def build_live_cluster(
     nonrt_cap: int = NONRT_BATCH_CAP,
     watchdog: Optional[WatchdogConfig] = None,
     fault_plans: Optional[Dict[str, FaultPlan]] = None,
+    chunk_depth: int = 1,
 ) -> Tuple[ClusterScheduler, Dict[str, LiveSlice]]:
     """Build a live multi-slice cluster: ``build_live_scheduler``, sliced.
 
@@ -355,6 +441,10 @@ def build_live_cluster(
     ``fault_plans``: per-slice-name deterministic fault injection
     (``FaultyDevice`` wraps that slice's AsyncDevice at the
     dispatch-handle layer — chaos tests and benchmarks only).
+    ``chunk_depth``: > 1 enables slack-driven multi-step decode
+    chunking on every slice (engines built chunk-capable, per-depth
+    WCET families profiled, EDF workers auto-wired — see
+    ``build_live_scheduler``).
     """
     cats = list(categories)
     kinds = {(mid, tuple(shape)): kind for mid, shape, kind in cats}
@@ -381,9 +471,13 @@ def build_live_cluster(
     for name in slice_names:
         bound = bounds.get(name, 1.0)
         engine = InferenceEngine(
-            configs, max_slots=slice_arena_slots(max_batch, bound)
+            configs, max_slots=slice_arena_slots(max_batch, bound),
+            chunk_depth=chunk_depth,
         )
-        table = profile_engine(engine, cats, batch_sizes, runs=profile_runs)
+        table = profile_engine(
+            engine, cats, batch_sizes, runs=profile_runs,
+            chunk_depth=chunk_depth,
+        )
         engine.reset_stats()  # stats cover served traffic, not profiling
         # One lease map per slice, shared by reference between the
         # dispatch closure (slot-aligned payload staging) and the
@@ -433,6 +527,7 @@ def build_live_transport(
     nonrt_cap: int = NONRT_BATCH_CAP,
     watchdog: Optional[WatchdogConfig] = None,
     fault_plans: Optional[Dict[str, FaultPlan]] = None,
+    chunk_depth: int = 1,
     shedding: bool = True,
     udp: bool = False,
     host: str = "127.0.0.1",
@@ -470,6 +565,7 @@ def build_live_transport(
         nonrt_cap=nonrt_cap,
         watchdog=watchdog,
         fault_plans=fault_plans,
+        chunk_depth=chunk_depth,
     )
     gateway = IngestGateway(cluster, shedding=shedding)
     transport = TransportServer(gateway, **transport_kwargs)

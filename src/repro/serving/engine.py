@@ -90,6 +90,7 @@ class StepHandle:
     kind: str
     true_batch: int
     bucket_batch: int  # prefill: the pow2 bucket; decode: max_slots
+    steps: int = 1  # decode steps this dispatch executed (chunk depth)
 
     def wait(self) -> Any:
         """Block until the device finishes; returns the ready outputs."""
@@ -136,6 +137,7 @@ class InferenceEngine:
         masked_decode: bool = True,
         max_slots: int = 8,
         staging_depth: int = 2,
+        chunk_depth: int = 1,
     ):
         """``donate_cache``: None resolves by backend (module docstring);
         explicit True/False force it — the benchmark A/Bs both arms.
@@ -146,9 +148,17 @@ class InferenceEngine:
         ``staging_depth``: host scratch buffers per staging ring; depth-1
         bounds concurrently in-flight staged jobs (the EDF worker keeps
         at most one in flight, so 2 = classic double buffering).
+        ``chunk_depth``: deepest multi-step decode chunk this engine will
+        serve (``decode_chunk``). A k-step chunk stages one DECODE ring
+        slot per step behind a single consumer, so decode rings are
+        sized ``max(staging_depth, chunk_depth + 1)`` — the depth must
+        be fixed before a ring's first use, hence a construction-time
+        parameter. 1 = chunking off (rings stay at ``staging_depth``).
         """
         if max_slots < 1:
             raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        if chunk_depth < 1:
+            raise ValueError(f"chunk_depth must be >= 1, got {chunk_depth}")
         self.configs = dict(configs)
         self.models = {mid: model_for(cfg) for mid, cfg in configs.items()}
         if donate_cache is None:
@@ -163,7 +173,11 @@ class InferenceEngine:
         self._compiled: Dict[Tuple, Any] = {}
         self._arenas: Dict[Tuple[str, int], SlotArena] = {}
         self.staging_depth = staging_depth
+        self.max_chunk_depth = chunk_depth
         self._rings: Dict[Tuple, StagingRing] = {}
+        # All-active step masks per (k, max_slots): resident, the common
+        # profiler/benchmark chunk input (no per-chunk host upload).
+        self._full_masks: Dict[int, jax.Array] = {}
         # Prefix-mode decode inputs per (mid, seq, live-count): tiny
         # (max_slots,) arrays, cached so the steady-state hot loop does
         # zero host->device transfers.
@@ -187,6 +201,7 @@ class InferenceEngine:
         self.stats.update(
             real_rows=0, bucket_rows=0, real_slots=0, total_slots=0,
             dispatches=0, decode_compiles=0, prefill_compiles=0,
+            chunk_steps=0,
         )
 
     def freeze(self) -> None:
@@ -239,6 +254,49 @@ class InferenceEngine:
                 )
                 new_cur = jnp.where(
                     active, jnp.minimum(cur + 1, seq - 1), cur
+                )
+                return logits, new_cache, new_cur
+
+            donate = (1,) if self.donate_cache else ()
+            self._compiled[key] = jax.jit(run, donate_argnums=donate)
+        return self._compiled[key]
+
+    def _decode_chunk_fn(self, mid: str, seq: int, k: int):
+        """THE k-step chunked decode program for (mid, seq, k): a
+        ``jax.lax.scan`` over the exact single-step body. Cursors and the
+        active bitmap are already device-resident, so the whole chunk
+        runs with no host round-trip — one dispatch amortizes the host
+        overhead of k steps. ``masks[i]`` gates which rows carry a REAL
+        token at step i (``active & masks[i]`` is the step's live set):
+        idle leased rows are masked per step exactly like single-step
+        ``step_rows``, so their cursors stay frozen across the chunk.
+
+        Bit-identity with k sequential single-step dispatches is a
+        CONTRACT (tests/test_decode_chunking.py): scan compiles the
+        identical step subgraph per iteration — no cross-step fusion can
+        change the math — so the chunked schedule is a pure latency
+        optimization, never a numerics fork.
+        """
+        key = ("decode_chunk", mid, seq, k)
+        if key not in self._compiled:
+            self.stats["decode_compiles"] += 1
+            model = self.models[mid]
+
+            def run(params, cache, toks, cur, active, masks):
+                def body(carry, xs):
+                    cache, cur = carry
+                    tok, mask = xs
+                    act = active & mask
+                    logits, new_cache = model.decode_step(
+                        params, cache, tok, cur, active=act
+                    )
+                    new_cur = jnp.where(
+                        act, jnp.minimum(cur + 1, seq - 1), cur
+                    )
+                    return (new_cache, new_cur), logits
+
+                (new_cache, new_cur), logits = jax.lax.scan(
+                    body, (cache, cur), (toks, masks)
                 )
                 return logits, new_cache, new_cur
 
@@ -325,13 +383,20 @@ class InferenceEngine:
         (prefill: (bucket, seq) token rows; decode: (max_slots,) tokens).
         Created on first use, then a fixed scratch pool forever — the
         steady-state hot loop performs zero fresh host allocations
-        (``host_allocs`` stays at ``staging_depth``; the ingest bench
-        smoke asserts it)."""
+        (``host_allocs`` stays at the ring's construction depth; the
+        ingest bench smoke asserts it)."""
         key = (kind, mid, seq, batch)
         ring = self._rings.get(key)
         if ring is None:
             shape = (batch, seq) if kind == "prefill" else (batch,)
-            ring = StagingRing(shape, np.int32, depth=self.staging_depth)
+            # Decode rings must hold a full chunk's per-step stages (one
+            # slot per step, all behind the chunk's single consumer)
+            # plus the fill target — ring depth is fixed at creation, so
+            # it is sized here, before any decode dispatch.
+            depth = self.staging_depth
+            if kind == "decode":
+                depth = max(depth, self.max_chunk_depth + 1)
+            ring = StagingRing(shape, np.int32, depth=depth)
             self._rings[key] = ring
         return ring
 
@@ -573,6 +638,159 @@ class InferenceEngine:
         ring.attach_consumer(handle.wait)
         return handle
 
+    def decode_chunk(
+        self, mid: str, shape_key: Tuple[int, ...], batch_size: int, k: int,
+        slots: Optional[Sequence[int]] = None,
+        payloads: Optional[Sequence] = None,
+        step_rows: Optional[Sequence[Optional[Sequence[int]]]] = None,
+    ) -> StepHandle:
+        """Launch ONE k-step decode chunk without waiting for the device.
+
+        The chunked twin of a decode ``dispatch``: the same slot-arena
+        semantics (``slots`` must be ALL live rows; prefix mode when
+        ``slots=None``), executed k steps deep by the scanned program
+        from ``_decode_chunk_fn`` — bit-identical to k sequential
+        single-step dispatches, with the k-1 intermediate host returns
+        removed.
+
+        ``payloads``: length-k sequence of per-step decode payloads
+        (each in any form single-step ``dispatch`` accepts: None, a
+        slot-aligned array, or a {slot: token} dict); ``None`` = all
+        steps zero-staged (the profiler's input). Each step's tokens go
+        through the SAME decode staging ring — one ring slot per step,
+        all guarded by this chunk's completion — so ``k`` must not
+        exceed ``ring.capacity`` (the engine sizes decode rings from
+        ``chunk_depth`` at construction; a deeper ad-hoc chunk is
+        rejected loudly rather than allowed to deadlock on its own
+        not-yet-dispatched consumer).
+
+        ``step_rows``: length-k sequence of per-step frame-bearing row
+        subsets (``None`` entry = every live row steps). Idle leased
+        rows at step i run masked: attention skipped, cursor frozen —
+        identical to single-step ``step_rows``, held per step across
+        the chunk.
+        """
+        self._check_not_frozen("decode_chunk")
+        seq = shape_key[0]
+        m = self.max_slots
+        if k < 1:
+            raise ValueError(f"chunk depth must be >= 1, got {k}")
+        if batch_size > m:
+            raise ValueError(
+                f"decode batch {batch_size} > max_slots {m}: size the "
+                f"arena via bucketing.arena_slots at engine build"
+            )
+        if payloads is not None and len(payloads) != k:
+            raise ValueError(
+                f"chunk of depth {k} needs {k} per-step payloads, "
+                f"got {len(payloads)}"
+            )
+        if step_rows is not None and len(step_rows) != k:
+            raise ValueError(
+                f"chunk of depth {k} needs {k} per-step row sets, "
+                f"got {len(step_rows)}"
+            )
+        arena = self.arena(mid, seq)
+        ring = self.staging_ring("decode", mid, seq, m)
+        if k > ring.capacity:
+            raise ValueError(
+                f"chunk depth {k} exceeds the decode ring's in-flight "
+                f"capacity {ring.capacity}: build the engine with "
+                f"chunk_depth >= {k}"
+            )
+        if slots is None:
+            if len(arena.free) != arena.max_slots:
+                raise ValueError(
+                    f"arena {mid}/seq={seq} has allocator-live rows "
+                    f"{sorted(arena.live)}; prefix-mode decode_chunk "
+                    f"would overwrite their KV at synthetic cursors — "
+                    f"pass slots= (all live rows) instead"
+                )
+            cur, active = self._prefix_inputs(mid, seq, batch_size)
+        else:
+            ids = [int(s) for s in slots]
+            if len(ids) != batch_size or len(set(ids)) != len(ids):
+                raise ValueError(
+                    f"need {batch_size} distinct slot ids, got {ids}"
+                )
+            if set(ids) != set(arena.live):
+                raise ValueError(
+                    f"slot dispatch must step ALL live rows "
+                    f"{sorted(arena.live)}, got {sorted(ids)}"
+                )
+            cur, active = arena.cur, arena.active
+            if step_rows is not None:
+                for i, rows_i in enumerate(step_rows):
+                    if rows_i is None:
+                        continue
+                    extra = sorted(set(int(s) for s in rows_i) - set(ids))
+                    if extra:
+                        raise ValueError(
+                            f"step {i} rows {extra} are not live rows "
+                            f"{sorted(ids)}"
+                        )
+        # Per-step token staging: one ring slot per step, every slot
+        # guarded by THIS chunk's completion (the guard closure resolves
+        # the handle after dispatch; a later chunk's refill of any of
+        # these scratches blocks until this chunk finished reading).
+        pending: Dict[str, Optional[StepHandle]] = {"handle": None}
+
+        def _chunk_guard() -> None:
+            h = pending["handle"]
+            if h is not None:
+                h.wait()
+
+        staged = []
+        prefix = batch_size if slots is None else None
+        for i in range(k):
+            payload_i = payloads[i] if payloads is not None else None
+            staged.append(
+                self._stage_decode_tokens(ring, payload_i, prefix_rows=prefix)
+            )
+            ring.attach_consumer(_chunk_guard)
+        toks = jnp.stack(staged)
+        masks = self._step_masks(k, step_rows)
+        fn = self._decode_chunk_fn(mid, seq, k)
+        kk = batch_size if self.masked_decode else m
+        self.stats["dispatches"] += 1
+        self.stats["chunk_steps"] += k
+        self.stats["real_rows"] += batch_size * k
+        self.stats["bucket_rows"] += m * k
+        self.stats["real_slots"] += batch_size * seq * k
+        self.stats["total_slots"] += kk * seq * k
+        logits, new_cache, new_cur = fn(
+            self.params[mid], arena.cache, toks, cur, active, masks
+        )
+        arena.cache = new_cache
+        if slots is not None:
+            arena.cur = new_cur
+        handle = StepHandle(logits, mid, "decode", batch_size, m, steps=k)
+        pending["handle"] = handle
+        return handle
+
+    def _step_masks(
+        self, k: int, step_rows: Optional[Sequence[Optional[Sequence[int]]]]
+    ) -> jax.Array:
+        """The (k, max_slots) per-step frame mask a chunk consumes.
+
+        All-active masks (the profiler / single-stream case) are cached
+        resident per depth; real per-step subsets build one small numpy
+        buffer and upload it — the chunk's only host->device transfer
+        besides the staged tokens."""
+        m = self.max_slots
+        if step_rows is None or all(r is None for r in step_rows):
+            if k not in self._full_masks:
+                self._full_masks[k] = jnp.ones((k, m), bool)
+            return self._full_masks[k]
+        buf = np.zeros((k, m), bool)
+        for i, rows_i in enumerate(step_rows):
+            if rows_i is None:
+                buf[i, :] = True
+            else:
+                for s in rows_i:
+                    buf[i, int(s)] = True
+        return jnp.asarray(buf)
+
     def execute(
         self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
         kind: str = "prefill", slots: Optional[Sequence[int]] = None,
@@ -583,6 +801,20 @@ class InferenceEngine:
         t0 = time.perf_counter()
         self.dispatch(
             mid, shape_key, batch_size, kind, slots=slots, payload=payload
+        ).wait()
+        return time.perf_counter() - t0
+
+    def execute_chunk(
+        self, mid: str, shape_key: Tuple[int, ...], batch_size: int, k: int,
+        slots: Optional[Sequence[int]] = None,
+        payloads: Optional[Sequence] = None,
+    ) -> float:
+        """Run one k-step decode chunk synchronously; returns wall
+        seconds. The offline profiler's per-depth measurement path (and
+        the benchmarks' chunk latency probes)."""
+        t0 = time.perf_counter()
+        self.decode_chunk(
+            mid, shape_key, batch_size, k, slots=slots, payloads=payloads
         ).wait()
         return time.perf_counter() - t0
 
@@ -605,7 +837,7 @@ class InferenceEngine:
 
     def job_bytes(
         self, mid: str, shape_key: Tuple[int, ...], batch_size: int,
-        kind: str = "prefill",
+        kind: str = "prefill", steps: int = 1,
     ) -> float:
         """Bytes a running job pins on-device (staging + the arena it
         executes against).
@@ -619,7 +851,12 @@ class InferenceEngine:
         seq = shape_key[0]
         if kind == "prefill":
             return float(4 * bucket(batch_size) * seq)  # int32 tokens
-        staging = 3 * 4 * self.max_slots  # tok + cursors + active
+        # steps > 1: a chunk stages one token vector per step (plus the
+        # (steps, max_slots) bool step-mask plane) on top of the shared
+        # cursors/active pair; steps == 1 is the classic tok+cur+active.
+        staging = (2 + steps) * 4 * self.max_slots
+        if steps > 1:
+            staging += steps * self.max_slots
         return float(staging + self.arena_nbytes(mid, seq))
 
     @property

@@ -1,0 +1,717 @@
+"""Multi-step decode chunking: slack-chosen k-step compiled decode
+programs, proven bit-identical by a differential test harness.
+
+Covers the acceptance bars of the chunking PR:
+
+- the DIFFERENTIAL ORACLE: a k-step ``decode_chunk`` is bit-identical
+  to k sequential single-step ``dispatch`` calls on a twin engine —
+  every KV arena leaf, the device-resident cursors and active bitmap,
+  and every step's logits / sampled (argmax) tokens — over scattered
+  leased rows, heterogeneous cursors, and per-step frame-bearing row
+  subsets (idle leased rows keep FROZEN cursors). Deterministic
+  scenario sweep plus a hypothesis property over seed-derived
+  workloads;
+- the profiler's chunk WCET family: per-depth ``record_flat``,
+  monotone enforcement, round-UP lookup for unprofiled depths, the
+  k x WCET_1 tail beyond the family, capacity scaling, and JSON
+  round-trips;
+- the EDF worker's slack-driven depth policy: deep chunks only when
+  every fused job's slack clears the chunk WCET + margin, depth-1
+  near deadlines, fused jobs consecutive in deadline order, the
+  chunk's FULL WCET charged to ``busy_until`` and the queued-WCET
+  total, per-step attribution to the adaptation module (no phantom
+  overruns), and unfuse-on-transient-submit-error;
+- sim-vs-live determinism: the same trace + table produces the same
+  chunk-depth sequence and completion order under the EventLoop/
+  SequentialDevice substrate and the WallClock/AsyncDevice substrate;
+- mid-chunk slice failure: the conservation identity
+  ``completed + dropped + lost == ingested`` holds when a slice dies
+  with a chunk in flight, and the displaced tail re-admits;
+- the health watchdog receives the CHUNK-scaled expected time, so
+  chunked serving under a tight slack produces zero false overdue
+  signals (no k x false positives);
+- the gateway's ``delay_estimate`` counts an in-flight chunk's FULL
+  residue (the ``device_tail`` term), not one step's;
+- live end-to-end: a backlogged live scheduler fuses chunks with ZERO
+  decode recompiles after the profiling warm-up.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import tiny
+from repro.core import (
+    Category,
+    ChunkJob,
+    ChunkPolicy,
+    DeepRT,
+    EventLoop,
+    FaultPlan,
+    FaultSpec,
+    FaultyDevice,
+    Frame,
+    HEALTHY,
+    JobInstance,
+    ProfileTable,
+    Request,
+    SequentialDevice,
+    SUBMIT_ERROR,
+    WatchdogConfig,
+    build_sim_cluster,
+)
+from repro.core.bucketing import chunk_depths
+from repro.core.simulator import WallClock
+from repro.ingest import CameraSource, IngestGateway
+from repro.serving.async_device import AsyncDevice
+from repro.serving.batcher_bridge import build_live_scheduler
+from repro.serving.engine import InferenceEngine
+
+MID = "granite-3-2b"
+SEQ = 16
+M = 8
+SHAPE = (SEQ,)
+DEPTHS = (1, 2, 4, 8)
+
+# Simulated decode category: flat 1-step WCET + a sublinear chunk family
+# (a k-step chunk amortizes the per-dispatch host overhead).
+SIM_MID = "m"
+SIM_SHAPE = (16,)
+SIM_CAT = Category(SIM_MID, SIM_SHAPE)
+W1 = 0.004
+
+
+def chunk_table(w1: float = W1, depths=(2, 4), sub: float = 0.8) -> ProfileTable:
+    t = ProfileTable()
+    t.record_flat(SIM_MID, SIM_SHAPE, w1, M)
+    for k in depths:
+        t.record_flat(SIM_MID, SIM_SHAPE, w1 * k * sub, M, k=k)
+    return t
+
+
+def sim_job(release: float, rel_dl: float, index: int = 0,
+            rid: int = 0) -> JobInstance:
+    f = Frame(
+        request_id=rid, category=SIM_CAT, index=index,
+        arrival_time=release, deadline=release + rel_dl,
+    )
+    return JobInstance(
+        category=SIM_CAT, frames=[f], release_time=release,
+        relative_deadline=rel_dl, shape_key=SIM_SHAPE,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunk-depth ladder (bucketing)
+# ---------------------------------------------------------------------------
+class TestChunkDepthLadder:
+    def test_pow2_ladder(self):
+        assert chunk_depths(8) == [1, 2, 4, 8]
+        assert chunk_depths(1) == [1]
+        # Non-pow2 maxima round up to the bucket, like batch buckets.
+        assert chunk_depths(5) == [1, 2, 4, 8]
+
+    def test_degenerate(self):
+        assert chunk_depths(0) == []
+        assert chunk_depths(-3) == []
+
+
+# ---------------------------------------------------------------------------
+# ProfileTable chunk family
+# ---------------------------------------------------------------------------
+class TestChunkFamilyTable:
+    def test_record_and_exact_lookup(self):
+        t = chunk_table()
+        assert t.chunk_wcet(SIM_MID, SIM_SHAPE, 1) == pytest.approx(W1)
+        assert t.chunk_wcet(SIM_MID, SIM_SHAPE, 4) == pytest.approx(W1 * 4 * 0.8)
+        assert t.chunk_depths_profiled(SIM_MID, SIM_SHAPE) == [1, 2, 4]
+        assert t.has_chunks(SIM_MID, SIM_SHAPE)
+        assert t.has_any_chunks()
+
+    def test_flat_only_table_has_no_chunks(self):
+        t = ProfileTable()
+        t.record_flat(SIM_MID, SIM_SHAPE, W1, M)
+        assert not t.has_chunks(SIM_MID, SIM_SHAPE)
+        assert not t.has_any_chunks()
+
+    def test_unprofiled_depth_rounds_up(self):
+        t = chunk_table()
+        # k=3 is between the profiled 2 and 4: conservative = round UP.
+        assert t.chunk_wcet(SIM_MID, SIM_SHAPE, 3) == \
+            t.chunk_wcet(SIM_MID, SIM_SHAPE, 4)
+
+    def test_beyond_family_charges_linear_tail(self):
+        t = chunk_table()
+        assert t.chunk_wcet(SIM_MID, SIM_SHAPE, 16) == pytest.approx(16 * W1)
+
+    def test_monotone_violation_rejected(self):
+        t = chunk_table()
+        with pytest.raises(ValueError, match="monotone"):
+            # Deeper chunk claiming to be CHEAPER than a shallower one.
+            t.record_flat(SIM_MID, SIM_SHAPE, W1 * 0.5, M, k=8)
+
+    def test_chunk_without_flat_base_rejected(self):
+        t = ProfileTable()
+        with pytest.raises((KeyError, ValueError)):
+            t.record_flat(SIM_MID, SIM_SHAPE, W1, M, k=4)
+
+    def test_scaled_scales_family(self):
+        t = chunk_table().scaled(2.0)
+        assert t.chunk_wcet(SIM_MID, SIM_SHAPE, 4) == \
+            pytest.approx(2.0 * W1 * 4 * 0.8)
+
+    def test_json_round_trip(self):
+        t = chunk_table()
+        back = ProfileTable.from_json(t.to_json())
+        for k in (1, 2, 3, 4, 16):
+            assert back.chunk_wcet(SIM_MID, SIM_SHAPE, k) == \
+                pytest.approx(t.chunk_wcet(SIM_MID, SIM_SHAPE, k))
+        assert back.chunk_depths_profiled(SIM_MID, SIM_SHAPE) == [1, 2, 4]
+
+
+# ---------------------------------------------------------------------------
+# Differential oracle: chunk vs sequential replay on twin engines
+# ---------------------------------------------------------------------------
+def _engine(chunk_depth: int = 8, seed: int = 0) -> InferenceEngine:
+    return InferenceEngine(
+        {MID: tiny(MID)}, seed=seed, max_slots=M, chunk_depth=chunk_depth
+    )
+
+
+def _lease(e: InferenceEngine, alloc_plan):
+    """Apply an identical alloc/free sequence; returns the live rows."""
+    allocs, frees = alloc_plan
+    for n, start_pos in allocs:
+        e.alloc_slots(MID, SEQ, n, start_pos=start_pos)
+    if frees:
+        e.free_slots(MID, SEQ, sorted(frees))
+    return list(e.arena(MID, SEQ).live)
+
+
+def run_differential(seed, alloc_plan, k, rows_plan, tok_seed):
+    """THE oracle: one k-step chunk on engine A vs the same schedule
+    replayed as k sequential 1-step dispatches on twin engine B must be
+    bit-identical: KV arena rows, cursors, active bitmap, per-step
+    logits and argmax tokens — and idle leased rows' cursors frozen."""
+    a, b = _engine(seed=seed), _engine(seed=seed)
+    live = _lease(a, alloc_plan)
+    assert _lease(b, alloc_plan) == live
+    rng = np.random.default_rng(tok_seed)
+    payloads = []
+    for rows_i in rows_plan:
+        rows = live if rows_i is None else list(rows_i)
+        payloads.append({int(r): int(rng.integers(0, 64)) for r in rows})
+    aa, ab = a.arena(MID, SEQ), b.arena(MID, SEQ)
+    pre_cur = np.asarray(aa.cur)
+
+    chunk_logits = a.decode_chunk(
+        MID, SHAPE, len(live), k,
+        slots=live, payloads=payloads, step_rows=rows_plan,
+    ).wait()
+    step_logits = [
+        b.dispatch(
+            MID, SHAPE, len(live), "decode",
+            slots=live, payload=payloads[i], step_rows=rows_plan[i],
+        ).wait()
+        for i in range(k)
+    ]
+
+    # 1) Every KV cache leaf bit-identical.
+    for la, lb in zip(
+        jax.tree_util.tree_leaves(aa.cache), jax.tree_util.tree_leaves(ab.cache)
+    ):
+        assert la.shape == lb.shape
+        assert bool(jnp.all(la == lb))
+    # 2) Device-resident cursors + active bitmap identical.
+    assert bool(jnp.all(aa.cur == ab.cur))
+    assert bool(jnp.all(aa.active == ab.active))
+    # 3) Per-step logits and sampled (argmax) tokens identical.
+    assert chunk_logits.shape[0] == k
+    for i in range(k):
+        assert bool(jnp.all(chunk_logits[i] == step_logits[i]))
+        assert bool(
+            jnp.all(chunk_logits[i].argmax(-1) == step_logits[i].argmax(-1))
+        )
+    # 4) Cursor arithmetic: a row advances once per step it carried a
+    # frame in (clamped at seq-1); idle leased rows stay FROZEN.
+    cur = np.asarray(aa.cur)
+    for r in live:
+        steps = sum(
+            1 for rows_i in rows_plan
+            if r in (live if rows_i is None else set(int(s) for s in rows_i))
+        )
+        assert cur[r] == min(pre_cur[r] + steps, SEQ - 1), (r, rows_plan)
+
+
+class TestDifferentialOracle:
+    @pytest.mark.parametrize("k", DEPTHS)
+    def test_all_rows_every_step(self, k):
+        run_differential(0, ([(M, 3)], set()), k, [None] * k, tok_seed=10 + k)
+
+    @pytest.mark.parametrize("k", (2, 4))
+    def test_scattered_rows_with_idle_steps(self, k):
+        # Live rows 1, 3, 4, 6 (scattered); per-step subsets including an
+        # EMPTY step (every leased row idle) and a full step.
+        plan = ([(M, 2)], {0, 2, 5, 7})
+        live = [1, 3, 4, 6]
+        rows_plan = [[1, 4], [], None, [3, 6]][:k]
+        run_differential(1, plan, k, rows_plan, tok_seed=21)
+        assert live == sorted(set(live))  # scenario sanity
+
+    def test_heterogeneous_cursors(self):
+        # Two lease generations at different start positions, holes freed.
+        plan = ([(4, 2), (4, 9)], {1, 5})
+        rows_plan = [[0, 4], [2, 3, 6, 7], None, [0]]
+        run_differential(2, plan, 4, rows_plan, tok_seed=33)
+
+    def test_cursor_clamp_at_seq_end(self):
+        # Rows starting at seq-2 hit the seq-1 clamp inside the chunk.
+        run_differential(3, ([(3, SEQ - 2)], set()), 4, [None] * 4, tok_seed=44)
+
+    def test_depth_one_chunk_is_a_single_step(self):
+        run_differential(0, ([(5, 4)], {1}), 1, [[0, 2]], tok_seed=55)
+
+
+class TestChunkValidation:
+    def test_depth_beyond_ring_capacity_rejected(self):
+        e = _engine(chunk_depth=1)
+        e.alloc_slots(MID, SEQ, 2)
+        with pytest.raises(ValueError, match="chunk_depth"):
+            e.decode_chunk(MID, SHAPE, 2, 4, slots=[0, 1])
+
+    def test_payload_and_rows_lengths_must_match_depth(self):
+        e = _engine()
+        live = list(e.alloc_slots(MID, SEQ, 2))
+        with pytest.raises(ValueError, match="payloads"):
+            e.decode_chunk(MID, SHAPE, 2, 4, slots=live, payloads=[None] * 3)
+        with pytest.raises(ValueError, match="row sets"):
+            e.decode_chunk(MID, SHAPE, 2, 4, slots=live,
+                           step_rows=[None] * 2)
+
+    def test_step_rows_must_be_live(self):
+        e = _engine()
+        live = list(e.alloc_slots(MID, SEQ, 2))
+        with pytest.raises(ValueError, match="not live"):
+            e.decode_chunk(MID, SHAPE, 2, 2, slots=live,
+                           step_rows=[[live[0]], [7]])
+
+    def test_prefix_chunk_refuses_leased_arena(self):
+        e = _engine()
+        e.alloc_slots(MID, SEQ, 2)
+        with pytest.raises(ValueError, match="allocator-live"):
+            e.decode_chunk(MID, SHAPE, 2, 2)
+
+    def test_chunk_is_one_dispatch_zero_recompiles(self):
+        e = _engine()
+        live = list(e.alloc_slots(MID, SEQ, 4))
+        e.decode_chunk(MID, SHAPE, 4, 4, slots=live).wait()  # compile
+        e.reset_stats()
+        e.decode_chunk(MID, SHAPE, 4, 4, slots=live).wait()
+        assert e.stats["decode_compiles"] == 0
+        assert e.stats["dispatches"] == 1
+        assert e.stats["chunk_steps"] == 4
+
+
+class TestChunkingProperty:
+    @pytest.mark.slow
+    def test_hypothesis_bit_identity(self):
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (installed in CI); a bare "
+            "environment skips this test instead of breaking collection",
+        )
+        import os
+
+        from hypothesis import HealthCheck, given, settings
+        from hypothesis import strategies as st
+
+        @settings(
+            max_examples=int(os.environ.get("REPRO_HYPOTHESIS_EXAMPLES", "10")),
+            deadline=None,
+            suppress_health_check=[HealthCheck.too_slow],
+        )
+        @given(seed=st.integers(0, 2**31 - 1))
+        def prop(seed):
+            # Seed-derived workload: random leased-row scatter, random
+            # cursor origin, random per-step frame-bearing subsets
+            # (including None = all rows and [] = all idle), random
+            # tokens, random depth.
+            rng = np.random.default_rng(seed)
+            k = int(rng.choice(DEPTHS))
+            n_freed = int(rng.integers(0, M - 1))
+            freed = set(
+                int(s) for s in rng.choice(M, size=n_freed, replace=False)
+            )
+            live = sorted(set(range(M)) - freed)
+            start = int(rng.integers(0, SEQ - 1))
+            rows_plan = []
+            for _ in range(k):
+                if rng.random() < 0.25:
+                    rows_plan.append(None)
+                else:
+                    sz = int(rng.integers(0, len(live) + 1))
+                    rows_plan.append(sorted(
+                        int(s)
+                        for s in rng.choice(live, size=sz, replace=False)
+                    ))
+            run_differential(
+                int(rng.integers(0, 4)), ([(M, start)], freed), k,
+                rows_plan, tok_seed=seed,
+            )
+
+        prop()
+
+
+# ---------------------------------------------------------------------------
+# EDF slack policy: depth choices, accounting, retry unfuse
+# ---------------------------------------------------------------------------
+def _sim_sched(table: ProfileTable, device=None) -> DeepRT:
+    loop = EventLoop()
+    if device is not None:
+        device = device(loop)
+    return DeepRT(table, loop=loop, device=device)
+
+
+def _depths(sched: DeepRT):
+    return [d for (_t, d, _jid) in sched.worker.chunk_log]
+
+
+class TestSlackPolicy:
+    def test_auto_wired_from_chunk_family(self):
+        assert _sim_sched(chunk_table()).worker.chunk_policy is not None
+        flat_only = ProfileTable()
+        flat_only.record_flat(SIM_MID, SIM_SHAPE, W1, M)
+        assert _sim_sched(flat_only).worker.chunk_policy is None
+
+    def test_backlog_with_ample_slack_goes_deep(self):
+        sched = _sim_sched(chunk_table())
+        jobs = [sim_job(0.0, 5.0, index=i) for i in range(8)]
+        for j in jobs:
+            sched.worker.submit(j)
+        sched.loop.run()
+        # Dispatch is a deferred PRIO_DISPATCH event, so the whole burst
+        # is queued by the first decision: two max-depth chunks.
+        assert _depths(sched) == [4, 4]
+        assert sched.metrics.chunk_submits == 2
+        assert sched.metrics.chunked_steps == 8
+        # Every job completed exactly once, in EDF (= submission) order.
+        done = [j.job_id for j in sched.worker.completed_jobs]
+        assert done == [j.job_id for j in jobs]
+
+    def test_tight_deadlines_force_single_steps(self):
+        sched = _sim_sched(chunk_table())
+        # Slack below W2 + margin at every decision point: never fuse.
+        for i in range(6):
+            sched.worker.submit(sim_job(0.0, 0.009, index=i))
+        sched.loop.run()
+        assert _depths(sched) == [1] * 6
+        assert sched.metrics.chunk_submits == 0
+
+    def test_tight_member_degrades_depth(self):
+        sched = _sim_sched(chunk_table())
+        jobs = [sim_job(0.0, 5.0, index=0), sim_job(0.0, 5.0, index=1),
+                sim_job(0.0, 5.0, index=2),
+                # 4th-in-deadline-order job too tight for a depth-4 chunk
+                # at the second dispatch (~W1 in): fused depth must drop.
+                sim_job(0.0, 0.012, index=3)]
+        # Tight job sorts FIRST (earliest absolute deadline).
+        for j in jobs:
+            sched.worker.submit(j)
+        sched.loop.run()
+        # Head of the queue at each decision never has a depth-4-worthy
+        # run behind it that fully clears the slack rule with the tight
+        # job inside it.
+        assert 4 not in _depths(sched)
+        assert len(sched.worker.completed_jobs) == 4
+
+    def test_chunk_full_wcet_charged_to_busy_until_and_queue(self):
+        sched = _sim_sched(chunk_table())
+        for i in range(8):
+            sched.worker.submit(sim_job(0.0, 5.0, index=i))
+        seen = {}
+
+        def probe():
+            # Runs while the first depth-4 chunk is still in flight.
+            log = sched.worker.chunk_log
+            if log and log[0][1] == 4:
+                seen["tail"] = sched.device.busy_until - log[0][0]
+                seen["queued"] = sched.worker.queued_wcet
+
+        w4 = chunk_table().chunk_wcet(SIM_MID, SIM_SHAPE, 4)
+        sched.loop.schedule(0.5 * W1, probe)
+        sched.loop.run()
+        # The device tail covers the FULL 4-step WCET (x the sim's 0.97
+        # actual factor), not one step's...
+        assert seen["tail"] >= 0.9 * w4 > W1
+        # ...and the 4 still-queued jobs keep their 1-step charges.
+        assert seen["queued"] == pytest.approx(4 * W1)
+
+    def test_chunk_completion_attributes_per_step_actuals(self):
+        sched = _sim_sched(chunk_table())
+        inner = sched.worker.on_job_complete
+        log = []
+
+        def spy(job, actual):
+            log.append((job.job_id, actual))
+            inner(job, actual)
+
+        sched.worker.on_job_complete = spy
+        for i in range(8):
+            sched.worker.submit(sim_job(0.0, 5.0, index=i))
+        sched.loop.run()
+        assert len(log) == 8
+        # Each chunked job was attributed its 1/k share: every recorded
+        # actual stays at or below the 1-step WCET, so the adaptation
+        # module sees zero phantom overruns from chunking.
+        assert all(actual <= W1 + 1e-12 for _jid, actual in log)
+        assert sched.metrics.overruns == 0
+
+    def test_transient_submit_error_unfuses_chunk(self):
+        plan = FaultPlan((FaultSpec(SUBMIT_ERROR, 1),))
+        sched = _sim_sched(
+            chunk_table(),
+            device=lambda loop: FaultyDevice(SequentialDevice(loop), plan),
+        )
+        jobs = [sim_job(0.0, 5.0, index=i) for i in range(8)]
+        for j in jobs:
+            sched.worker.submit(j)
+        sched.loop.run()
+        # Submit #1 — the depth-4 chunk — was refused: its members were
+        # unfused back into the queue and retried; every job still
+        # completes exactly once.
+        assert sched.metrics.submit_retries >= 1
+        assert sched.metrics.duplicate_completions == 0
+        assert sorted(j.job_id for j in sched.worker.completed_jobs) == \
+            sorted(j.job_id for j in jobs)
+
+    def test_policy_from_table_margin(self):
+        pol = ChunkPolicy.from_table(chunk_table(), margin_steps=2.0)
+        head = sim_job(0.0, 1.0)
+        assert pol.margin_fn(head) == pytest.approx(2.0 * W1)
+        assert pol.depths_fn(head) == [1, 2, 4]
+        assert pol.wcet_fn(head, 4) == pytest.approx(W1 * 4 * 0.8)
+        assert pol.eligible_fn(head)
+        nrt = JobInstance(
+            category=Category(SIM_MID, SIM_SHAPE, realtime=False),
+            frames=[], release_time=0.0, relative_deadline=1.0,
+            shape_key=SIM_SHAPE,
+        )
+        assert not pol.eligible_fn(nrt)
+
+
+# ---------------------------------------------------------------------------
+# Sim-vs-live determinism: same trace + table -> same depths, same order
+# ---------------------------------------------------------------------------
+class _InstantHandle:
+    def wait(self):
+        return None
+
+
+class TestSimLiveDeterminism:
+    def _trace(self):
+        # Deadlines far from every depth threshold (seconds vs the
+        # ~5 ms decision scale), plus one HARD-tight job — so wall-clock
+        # jitter in the live arm cannot flip any depth decision.
+        rel = [30.0, 30.0, 30.0, 30.0, 0.004, 30.0, 30.0, 30.0]
+        return [sim_job(0.0, r, index=i) for i, r in enumerate(rel)]
+
+    def _run(self, sched, jobs, live=False):
+        for j in jobs:
+            sched.worker.submit(j)
+        if live:
+            sched.loop.run(until=sched.loop.now + 0.5)
+        else:
+            sched.loop.run()
+        base = jobs[0].job_id
+        return (
+            _depths(sched),
+            [log_jid - base for (_t, _d, log_jid) in sched.worker.chunk_log],
+            [j.job_id - base for j in sched.worker.completed_jobs],
+        )
+
+    def test_same_trace_same_depth_sequence_and_completion_order(self):
+        table = chunk_table(w1=0.002)
+        sim = self._run(_sim_sched(table), self._trace())
+
+        loop = WallClock()
+        live_sched = DeepRT(
+            table, loop=loop,
+            device=AsyncDevice(loop, lambda job: _InstantHandle()),
+        )
+        live = self._run(live_sched, self._trace(), live=True)
+
+        assert sim[0] == live[0]  # chunk-depth sequence
+        assert sim[1] == live[1]  # decision heads (relative job ids)
+        assert sim[2] == live[2]  # completion order
+        assert len(sim[2]) == 8
+
+
+# ---------------------------------------------------------------------------
+# Mid-chunk slice failure + watchdog chunk scaling
+# ---------------------------------------------------------------------------
+class TestMidChunkFailure:
+    def test_fail_slice_mid_chunk_conserves_frames(self):
+        # A periodic stream rides the victim slice; a same-category
+        # burst of ample-slack jobs (counted as ingested, exactly like
+        # the gateway's delivery path) builds the queue the EDF worker
+        # fuses. The probe fails the slice WHILE a chunk is in flight.
+        cluster = build_sim_cluster(chunk_table, ("s0", "s1"))
+        req = Request(category=SIM_CAT, period=0.012,
+                      relative_deadline=0.06, n_frames=50)
+        assert cluster.submit_request(req)
+        sl = cluster.slices["s0"]
+        w = sl.scheduler.worker
+
+        def burst():
+            for i in range(8):
+                sl.scheduler.metrics.record_ingest()
+                w.submit(sim_job(cluster.loop.now, 5.0, index=100 + i,
+                                 rid=999))
+
+        cluster.loop.schedule(0.05, burst)
+        state = {"failed_at": None}
+
+        def probe():
+            if state["failed_at"] is not None:
+                return
+            done = {j.job_id for j in w.completed_jobs}
+            if (w.chunk_log and w.chunk_log[-1][1] > 1
+                    and not sl.scheduler.device.idle
+                    and w.chunk_log[-1][2] not in done):
+                state["failed_at"] = cluster.loop.now
+                cluster.fail_slice("s0")
+                return
+            if cluster.loop.now < 1.0:
+                cluster.loop.schedule(cluster.loop.now + 0.002, probe)
+
+        cluster.loop.schedule(0.0, probe)
+        cluster.run()
+        # The probe really did catch a chunk in flight.
+        assert state["failed_at"] is not None
+        assert sl.scheduler.metrics.chunk_submits >= 1
+        # THE conservation identity survives a mid-chunk slice death:
+        # every ingested frame is completed, shed, or reconciled lost.
+        agg = cluster.aggregate_metrics()
+        assert (agg["completed_frames"] + agg["dropped_frames"]
+                + agg["lost_frames"]) == agg["ingested_frames"], agg
+        # The displaced request's unconsumed tail re-admitted (or is
+        # accounted): it appears in exactly one failover ledger.
+        assert (req.request_id in cluster.failover_map
+                or req.request_id in cluster.finished_with_slice)
+        assert cluster.parked == {}
+        if cluster.failover_map.get(req.request_id) is not None:
+            tail_rid = cluster.failover_map[req.request_id]
+            tail = cluster.requests[tail_rid]
+            # Only the unconsumed steps moved — never a replay of the
+            # full stream.
+            assert tail.n_frames < req.n_frames
+            assert cluster.placement[tail_rid] == "s1"
+
+    def test_watchdog_uses_chunk_scaled_expectation(self):
+        # Slack 2.0 < the fused depth: if the watchdog were armed with
+        # the 1-STEP WCET, every depth-4 chunk (actual ~= 4 x one step)
+        # would trip overdue and quarantine the slice. Chunk-scaled
+        # expectations keep a healthy chunked slice HEALTHY.
+        cfg = WatchdogConfig(slack=2.0, hang_slack=10.0,
+                             suspect_after=1, quarantine_after=2)
+        cluster = build_sim_cluster(chunk_table, ("s0",), watchdog=cfg)
+        sl = cluster.slices["s0"]
+
+        def burst():
+            for i in range(8):
+                sl.scheduler.worker.submit(sim_job(
+                    cluster.loop.now, 5.0, index=i))
+
+        cluster.loop.schedule(0.0, burst)
+        cluster.run()
+        assert sl.scheduler.metrics.chunk_submits >= 1
+        assert sl.health == HEALTHY
+        assert cluster.health.transitions == []
+
+
+# ---------------------------------------------------------------------------
+# Gateway delay estimate counts in-flight chunk residue
+# ---------------------------------------------------------------------------
+class TestChunkResidueAccounting:
+    def test_delay_estimate_includes_full_chunk_tail(self):
+        # The session streams a BUCKETED category (flat decode streams
+        # need the cluster's lease path); the chunked backlog shares its
+        # device, which is all ``device_tail`` measures.
+        table = chunk_table()
+        cls_cat = Category("cls", (4,))
+        for b in (1, 2, 4, 8):
+            table.record("cls", (4,), b, 0.002 + 0.0005 * b)
+        sched = DeepRT(table)
+        gw = IngestGateway(sched)
+        src = CameraSource(period=0.05, n_frames=10, payload_shape=(4,),
+                           seed=0)
+        session = gw.register(src, cls_cat, relative_deadline=0.25)
+        assert session.state == "active"
+
+        def burst():
+            for i in range(8):
+                sched.worker.submit(sim_job(sched.loop.now, 5.0, index=i,
+                                            rid=10_000))
+
+        seen = {}
+
+        def probe():
+            if seen:
+                return
+            w = sched.worker
+            done = {j.job_id for j in w.completed_jobs}
+            if (w.chunk_log and w.chunk_log[-1][1] > 1
+                    and not sched.device.idle
+                    and w.chunk_log[-1][2] not in done):
+                gw.delay_estimate(session)
+                seen["breakdown"] = dict(session.last_delay_breakdown)
+                seen["depth"] = w.chunk_log[-1][1]
+                return
+            if sched.loop.now < 1.0:
+                sched.loop.schedule(sched.loop.now + 0.001, probe)
+
+        sched.loop.schedule(0.001, burst)
+        sched.loop.schedule(0.002, probe)
+        sched.run()
+        assert seen, "no chunk was ever in flight"
+        bd = seen["breakdown"]
+        # The in-flight chunk's residue counts in FULL: the device tail
+        # exceeds a single step's WCET — without the chunk charge this
+        # term would be <= W1 and CREDIT downshifts would fire k steps
+        # late.
+        assert bd["device_tail"] > W1
+        assert bd["device_tail"] <= \
+            chunk_table().chunk_wcet(SIM_MID, SIM_SHAPE, seen["depth"])
+        assert set(bd) == {"device_tail", "queued_wcet", "window_wait",
+                           "batch_wcet"}
+
+
+# ---------------------------------------------------------------------------
+# Live end-to-end: backlog fuses chunks, zero recompiles
+# ---------------------------------------------------------------------------
+class TestLiveChunkedServing:
+    def test_backlog_fuses_chunks_zero_recompiles(self):
+        sched, engine, table = build_live_scheduler(
+            {MID: tiny(MID)}, [(MID, SHAPE, "decode")], chunk_depth=4,
+        )
+        assert table.chunk_depths_profiled(MID, SHAPE) == [1, 2, 4]
+        assert sched.worker.chunk_policy is not None
+        cat = Category(MID, SHAPE)
+        jobs = []
+        for i in range(8):
+            f = Frame(request_id=0, category=cat, index=i,
+                      arrival_time=0.0, deadline=30.0)
+            jobs.append(JobInstance(
+                category=cat, frames=[f], release_time=sched.loop.now,
+                relative_deadline=30.0, shape_key=SHAPE,
+            ))
+        for j in jobs:
+            sched.worker.submit(j)
+        sched.loop.run(until=sched.loop.now + 5.0)
+        assert len(sched.worker.completed_jobs) == 8
+        assert sched.metrics.chunk_submits >= 1
+        assert sched.metrics.chunked_steps >= 2
+        # Profiling warmed every depth on the ladder: serving recompiled
+        # NOTHING.
+        assert engine.stats["decode_compiles"] == 0
+        assert engine.stats["chunk_steps"] >= 2

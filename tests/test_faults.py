@@ -560,6 +560,7 @@ class TestChaosConservation:
     def test_seed_sweep(self, seed):
         assert_chaos_invariants(run_chaos(seed))
 
+    @pytest.mark.slow
     def test_hypothesis_property(self):
         pytest.importorskip(
             "hypothesis",

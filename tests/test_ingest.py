@@ -407,6 +407,7 @@ class TestDoubleBufferInterleaving:
                     assert bool(jnp.all(h.wait()[:2] == ref))
                 handles = []
 
+    @pytest.mark.slow
     def test_hypothesis_interleaved_payload_isolation(self):
         pytest.importorskip(
             "hypothesis",

@@ -633,6 +633,7 @@ def _chaos_run(seed, p_drop, p_dup, p_reorder, p_delay, fail):
 
 
 class TestLinkChaosProperty:
+    @pytest.mark.slow
     def test_any_schedule_preserves_guarantees(self):
         pytest.importorskip(
             "hypothesis",
