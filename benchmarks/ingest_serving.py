@@ -49,7 +49,7 @@ from typing import Dict, List
 
 from benchmarks.common import check_finite, write_csv
 from repro.configs.registry import tiny
-from repro.core import Category, DeepRT, ProfileTable
+from repro.core import Category, DeepRT, FrameTracer, ProfileTable
 from repro.ingest import BurstSource, CameraSource, IngestGateway
 from repro.serving.batcher_bridge import build_live_cluster
 
@@ -85,7 +85,10 @@ def live_staged_arm(smoke: bool) -> Dict:
     )
     build_s = time.perf_counter() - t0
 
+    tracer = FrameTracer()
+    cluster.attach_tracer(tracer)
     gw = IngestGateway(cluster)
+    gw.tracer = tracer
     sessions = []
     for i in range(n_decode):
         sessions.append(gw.register(
@@ -131,8 +134,13 @@ def live_staged_arm(smoke: bool) -> Dict:
         "dropped_frames": agg["dropped_frames"],
         "miss_rate": agg["miss_rate"],
         "mean_e2e_latency": agg["mean_e2e_latency"],
+        "e2e_p99": agg["e2e_p99"],
         "throughput_frames_per_sec": throughput,
         "per_slice": per_slice,
+        # The unified observability tree: slice health/utilization,
+        # latency histograms, arena + staging-ring probes, chunk-depth
+        # histogram, watchdog stats, tracer ring + miss attribution.
+        "telemetry": cluster.telemetry_snapshot(),
     }
 
     # Bit-rot guards.
@@ -170,7 +178,10 @@ def shedding_arm(smoke: bool) -> Dict:
     arms = {}
     for label, shedding in (("no_shed", False), ("shed", True)):
         sched = DeepRT(_sim_table())
+        tracer = FrameTracer()
+        sched.attach_tracer(tracer, tag=label)
         gw = IngestGateway(sched, shedding=shedding)
+        gw.tracer = tracer
         # Declared: 1 frame / 0.1s (admissible, U ~= 0.9 at the window
         # batch); delivered: the same budget at 2x in bursts of 4.
         src = BurstSource(
@@ -188,10 +199,24 @@ def shedding_arm(smoke: bool) -> Dict:
             "missed": m.missed_frames,
             "miss_rate": m.miss_rate,
             "mean_e2e_latency": m.mean_e2e_latency,
+            "e2e_p99": m.e2e_percentile(0.99),
+            "telemetry": {
+                "terminals": dict(tracer.terminals),
+                "attribution": tracer.attribution(),
+            },
         }
         # Conservation: nothing silently vanishes.
         assert session.conserved(), (label, arms[label])
         assert m.completed_frames + m.dropped_frames == n_frames, arms[label]
+        # Deadline-miss attribution closes: every missed frame's
+        # per-stage budget breakdown sums to its observed latency.
+        assert len(tracer.miss_log) == m.missed_frames, label
+        for entry in tracer.miss_log:
+            assert abs(sum(entry["stages"].values()) - entry["total"]) \
+                < 1e-9, (label, entry)
+        # Trace-level conservation matches the metrics identity.
+        assert sum(tracer.terminals.values()) == session.frames_ingested, (
+            label, tracer.terminals)
 
     # THE acceptance bar: adaptation-driven shedding strictly reduces
     # deadline misses under the overload, by actually dropping frames.

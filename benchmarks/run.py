@@ -28,6 +28,7 @@ SUITES = [
     ("fault_tolerance", "benchmarks.fault_tolerance"),
     ("transport_robustness", "benchmarks.transport_robustness"),
     ("decode_chunking", "benchmarks.decode_chunking"),
+    ("telemetry_overhead", "benchmarks.telemetry_overhead"),
 ]
 
 

@@ -40,7 +40,14 @@ import json
 import sys
 
 from repro.configs.registry import tiny
-from repro.core import BATCH, Category, EventLoop, TraceSpec, generate_trace
+from repro.core import (
+    BATCH,
+    Category,
+    EventLoop,
+    FrameTracer,
+    TraceSpec,
+    generate_trace,
+)
 from repro.ingest import (
     BurstSource,
     CameraSource,
@@ -69,7 +76,24 @@ ap.add_argument("--transport", action="store_true",
                      "reassembly, client backpressure (implies a cluster)")
 ap.add_argument("--chaos-seed", type=int, default=7,
                 help="seed for the per-stream LinkPlan (--transport)")
+ap.add_argument("--trace", metavar="PATH", default=None,
+                help="dump the frame-lifecycle trace as Chrome "
+                     "trace_event JSON (load via chrome://tracing or "
+                     "https://ui.perfetto.dev)")
 args = ap.parse_args()
+
+# One tracer spans whatever topology the flags select — wire receive,
+# gateway shed verdicts, window closes, EDF dispatch, completions.
+TRACER = FrameTracer() if args.trace else None
+
+
+def dump_trace() -> None:
+    if TRACER is None:
+        return
+    TRACER.dump_chrome_trace(args.trace)
+    snap = TRACER.snapshot()
+    print(f"trace  : {snap['events']} spans ({snap['emitted']} emitted, "
+          f"{snap['evicted']} evicted) -> {args.trace}")
 
 arch_ids = ["granite-3-2b", "rwkv6-1.6b"]
 configs = {a: tiny(a) for a in arch_ids}
@@ -119,6 +143,7 @@ def serve_ingest(target, engines):
     """Stream real payloads through the gateway over ``target`` (a live
     DeepRT or a ClusterScheduler); print the ingest scorecard."""
     gw = IngestGateway(target)
+    gw.tracer = TRACER
     sessions = []
     for cat, deadline, src in make_sources():
         s = gw.register(src, cat, relative_deadline=deadline)
@@ -154,6 +179,7 @@ def serve_transport():
         configs, categories,
         slice_names=tuple(f"slice{i}" for i in range(n_slices)),
         record_payloads=False,
+        tracer=TRACER,
     )
     loop = cluster.loop
     clients, links = [], []
@@ -197,6 +223,7 @@ def serve_transport():
     for name, sl in slices.items():
         print(f"  {name}: decode_compiles={sl.engine.stats['decode_compiles']} "
               f"device_busy={sl.device.busy_time:.2f}s")
+    dump_trace()
 
 
 if args.transport:
@@ -210,6 +237,7 @@ if args.slices > 1:
     cluster, slices = build_live_cluster(
         configs, categories,
         slice_names=tuple(f"slice{i}" for i in range(args.slices)),
+        tracer=TRACER,
     )
     if args.source:
         serve_ingest(cluster, {n: sl.engine for n, sl in slices.items()})
@@ -218,6 +246,7 @@ if args.slices > 1:
               f"missed={agg['missed_frames']} ({agg['miss_rate']:.1%}) "
               f"shed={agg['dropped_frames']} "
               f"e2e={agg['mean_e2e_latency']*1e3:.1f}ms")
+        dump_trace()
         sys.exit(0)
     for r in make_trace():
         r.start_time = 0.0
@@ -238,10 +267,12 @@ if args.slices > 1:
               f"decode_compiles={st['decode_compiles']} "
               f"prefill_compiles={st['prefill_compiles']} "
               f"device_busy={sl.device.busy_time:.2f}s")
+    dump_trace()
     sys.exit(0)
 
 print("compiling + profiling engine (paper §4.1 offline pass)...")
-sched, engine, table = build_live_scheduler(configs, categories)
+sched, engine, table = build_live_scheduler(configs, categories,
+                                            tracer=TRACER)
 
 if args.source:
     serve_ingest(sched, {"device0": engine})
@@ -250,6 +281,7 @@ if args.source:
           f"({m.miss_rate:.1%}) shed={m.dropped_frames} "
           f"e2e={m.mean_e2e_latency*1e3:.1f}ms "
           f"sched-latency={m.mean_latency*1e3:.1f}ms")
+    dump_trace()
     sys.exit(0)
 for (mid, shape), batches in sorted(
     ((k, v) for k, v in table.entries.items()), key=lambda kv: kv[0]
@@ -291,3 +323,4 @@ print(
     f"BATCH-4: completed={bm.completed_frames} missed={bm.missed_frames} "
     f"({bm.miss_rate:.1%}) jobs={bm.job_count} mean_batch={bm.mean_batch:.2f}"
 )
+dump_trace()

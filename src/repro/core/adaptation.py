@@ -114,6 +114,19 @@ class AdaptationModule:
         """Gateway report: ``n`` frames of ``category`` were shed."""
         self.sheds[category] = self.sheds.get(category, 0) + n
 
+    def telemetry(self) -> Dict[str, object]:
+        """JSON-able adaptation state for the cluster telemetry snapshot:
+        live penalty mass per category, shape-change / restore counts,
+        gateway-reported sheds, and the device-health coupling."""
+        return {
+            "enabled": self.enabled,
+            "device_degraded": self.device_degraded,
+            "shape_changes": self.shape_changes,
+            "restores": self.restores,
+            "penalties": {str(c): p for c, p in self.penalties.items()},
+            "sheds": {str(c): n for c, n in self.sheds.items()},
+        }
+
     def _shrunken(self, category: Category) -> Optional[ShapeKey]:
         """The next profiled shape below the category's current shape.
 

@@ -92,6 +92,11 @@ class AdmissionResult:
 class AdmissionControl:
     def __init__(self, table: ProfileTable):
         self.table = table
+        # Verdict counters for the telemetry snapshot: which phase
+        # turned requests away matters for capacity planning (phase-1 =
+        # raw utilization, phase-2 = deadline packing).
+        self.stats = {"admitted": 0, "rejected_phase1": 0,
+                      "rejected_phase2": 0}
 
     # ------------------------------------------------------------------
     # Phase 1: utilization-based filter.
@@ -224,6 +229,7 @@ class AdmissionControl:
         pending request folded into its category snapshot)."""
         u = self.phase1_utilization(state.categories)
         if u > utilization_bound + 1e-9:
+            self.stats["rejected_phase1"] += 1
             return AdmissionResult(
                 admitted=False,
                 phase=1,
@@ -232,6 +238,7 @@ class AdmissionControl:
             )
         jobs = self.generate_pseudo_jobs(state)
         ok, preds = self.edf_imitator(jobs, start_time=max(state.now, state.device_free_at))
+        self.stats["admitted" if ok else "rejected_phase2"] += 1
         return AdmissionResult(
             admitted=ok,
             phase=2,

@@ -46,6 +46,7 @@ from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.core import telemetry as T
 from repro.core.faults import (
     CompletionWatchdog,
     FaultPlan,
@@ -56,6 +57,7 @@ from repro.core.profiler import ProfileTable
 from repro.core.request import Request
 from repro.core.scheduler import DeepRT, ExecutionModel
 from repro.core.simulator import EventLoop, SequentialDevice
+from repro.core.telemetry import LatencyHistogram, render_text
 
 # Slice health states (the watchdog-driven state machine):
 #
@@ -293,6 +295,8 @@ class SliceHealthMonitor:
         # Audit trail: (t, name, old, new, reason).
         self.transitions: List[Tuple[float, str, str, str, str]] = []
         self.listeners: List[Callable[[str, str, str], None]] = []
+        # Frame-lifecycle tracer (core/telemetry.py); None = off.
+        self.tracer = None
 
     def subscribe(self, fn: Callable[[str, str, str], None]) -> None:
         self.listeners.append(fn)
@@ -305,6 +309,10 @@ class SliceHealthMonitor:
         sl = self.cluster.slices.get(name)
         if sl is None or not sl.alive:
             return
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.WATCHDOG_OVERDUE, self.cluster.loop.now, where=name,
+                meta={"expected": expected, "elapsed": elapsed})
         if elapsed >= self.config.hang_after(expected):
             # A hang can never produce the late *completions* the streak
             # counts — it is quarantined directly.
@@ -395,6 +403,10 @@ class SliceHealthMonitor:
         self.late_streak[name] = 0
         self.clean_streak[name] = 0
         self.transitions.append((self.cluster.loop.now, name, old, new, reason))
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.HEALTH_TRANSITION, self.cluster.loop.now, where=name,
+                meta={"old": old, "new": new, "reason": reason})
         # Couple into the paper's adaptation loop: a drifting device
         # tightens the gateway's shed budget for ALL its categories
         # (AdaptationModule.DEGRADED_BUDGET_TIGHTEN), not just penalized
@@ -446,6 +458,9 @@ class ClusterScheduler:
         self.placement_attempts: Deque[
             Tuple[int, Tuple[Tuple[str, float], ...], Optional[str]]
         ] = deque(maxlen=4096)
+        # Evictions from the bounded audit trail above — the overflow
+        # count keeps the total submission volume reconstructible.
+        self.placement_attempts_overflow = 0
         # Failover audit: displaced request -> re-admitted tail request id
         # (None = shed). Requests whose frames had all arrived when their
         # slice died have nothing to re-admit and land in
@@ -474,6 +489,14 @@ class ClusterScheduler:
         # requests — the owner replays the real buffered bytes into them
         # instead of the cluster streaming synthetic frames.
         self.rehome_owner = None
+        # Frame-lifecycle tracer (core/telemetry.py); attach_tracer wires
+        # every slice's pipeline plus the health monitor.
+        self.tracer = None
+        # Extra snapshot sections: name -> zero-arg callable returning a
+        # JSON-able dict. The live factory registers engine probes here
+        # (arena occupancy, staging-ring reuse) so telemetry_snapshot
+        # folds execution-substrate state in without core importing it.
+        self.telemetry_probes: Dict[str, Callable[[], Dict]] = {}
 
     def set_rehome_owner(self, owner) -> None:
         self.rehome_owner = owner
@@ -485,7 +508,19 @@ class ClusterScheduler:
     def register(self, sl: Slice) -> Slice:
         """Add a pre-built slice (the live factory's entry point)."""
         self.slices[sl.spec.name] = sl
+        if self.tracer is not None:
+            sl.scheduler.attach_tracer(self.tracer, tag=sl.spec.name)
         return sl
+
+    def attach_tracer(self, tracer) -> None:
+        """Enable frame-lifecycle tracing cluster-wide: every slice's
+        pipeline (tagged with the slice name) plus the health monitor's
+        watchdog/transition lane. Slices registered later inherit the
+        tracer. ``tracer=None`` detaches everywhere."""
+        self.tracer = tracer
+        self.health.tracer = tracer
+        for sl in self.slices.values():
+            sl.scheduler.attach_tracer(tracer, tag=sl.spec.name)
 
     def mark_slow(self, name: str, factor: Optional[float] = None) -> float:
         """Straggler: scale the slice's WCET table for future admissions;
@@ -700,6 +735,8 @@ class ClusterScheduler:
                 self.requests[request.request_id] = request
                 chosen = sl.spec.name
                 break
+        if len(self.placement_attempts) == self.placement_attempts.maxlen:
+            self.placement_attempts_overflow += 1
         self.placement_attempts.append(
             (request.request_id,
              tuple((name, u) for u, name, _ in ranked), chosen)
@@ -712,8 +749,7 @@ class ClusterScheduler:
 
     def aggregate_metrics(self) -> Dict[str, float]:
         total = missed = jobs = shed = lost = delivered = retries = 0
-        e2e_sum = 0.0
-        e2e_n = 0
+        e2e = LatencyHistogram()
         for sl in self.slices.values():
             m = sl.scheduler.metrics
             total += m.completed_frames
@@ -723,8 +759,9 @@ class ClusterScheduler:
             lost += m.lost_frames
             delivered += m.delivered_frames
             retries += m.submit_retries
-            e2e_sum += sum(m.e2e_latencies)
-            e2e_n += len(m.e2e_latencies)
+            # Streaming histograms, not raw sample lists: correct (and
+            # O(1) memory) even with Metrics.record_samples off.
+            e2e.merge(m.e2e_hist)
         return {
             "completed_frames": total,
             "missed_frames": missed,
@@ -735,12 +772,70 @@ class ClusterScheduler:
             "lost_frames": lost,
             "ingested_frames": delivered + shed,
             "submit_retries": retries,
-            "mean_e2e_latency": e2e_sum / e2e_n if e2e_n else 0.0,
+            "mean_e2e_latency": e2e.mean,
+            "e2e_p50": e2e.percentile(0.50),
+            "e2e_p95": e2e.percentile(0.95),
+            "e2e_p99": e2e.percentile(0.99),
+            "max_e2e_latency": e2e.vmax,
             "reroutes": self.reroutes,
             "parked": len(self.parked),
             "parked_admitted": len(self.parked_admitted),
             "parked_expired": len(self.parked_expired),
         }
+
+    def telemetry_snapshot(self) -> Dict:
+        """One JSON-able tree of everything observable about the
+        cluster: aggregate + per-slice frame metrics, slice health and
+        utilization, chunk-depth histograms and bounded-log overflow
+        counters, watchdog statistics, registered execution-substrate
+        probes (arena occupancy, staging-ring reuse — see
+        ``telemetry_probes``), and — when a tracer is attached — the
+        tracer's ring stats and full deadline-miss attribution. The
+        transport server embeds this into its STATUS reply; never the
+        other way around (no recursion)."""
+        slices = {}
+        for name, sl in self.slices.items():
+            m = sl.scheduler.metrics
+            w = sl.scheduler.worker
+            slices[name] = {
+                "health": sl.health,
+                "alive": sl.alive,
+                "utilization": sl.utilization() if sl.alive else 0.0,
+                "slow_factor": sl.slow_factor,
+                "completed_frames": m.completed_frames,
+                "missed_frames": m.missed_frames,
+                "dropped_frames": m.dropped_frames,
+                "lost_frames": m.lost_frames,
+                "delivered_frames": m.delivered_frames,
+                "latency": m.latency_hist.to_dict(),
+                "e2e": m.e2e_hist.to_dict(),
+                "chunk_depths": {str(k): v for k, v in
+                                 sorted(w.chunk_depth_counts.items())},
+                "chunk_log_overflow": w.chunk_log_overflow,
+                "admission": dict(sl.scheduler.admission.stats),
+                "adaptation": sl.scheduler.adaptation.telemetry(),
+            }
+        h = self.health
+        snap = {
+            "aggregate": self.aggregate_metrics(),
+            "slices": slices,
+            "placement_attempts_overflow": self.placement_attempts_overflow,
+            "watchdog": {
+                "transitions": len(h.transitions),
+                "reprofiles": dict(h.reprofiles),
+                "submit_errors": dict(h.submit_errors),
+            },
+        }
+        for name, probe in self.telemetry_probes.items():
+            snap[name] = probe()
+        if self.tracer is not None:
+            snap["tracer"] = self.tracer.snapshot()
+            snap["attribution"] = self.tracer.attribution()
+        return snap
+
+    def telemetry_text(self) -> str:
+        """``/metrics``-style text exposition of the snapshot."""
+        return render_text(self.telemetry_snapshot())
 
 
 def build_sim_cluster(

@@ -39,6 +39,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core import telemetry as T
 from repro.core.request import Category, Frame, JobInstance, Request
 
 WINDOW_FRACTION = 0.5  # Theorem 1: half of the smallest relative deadline.
@@ -78,6 +79,9 @@ class DisBatcher:
         self.loop = loop
         self.emit = emit
         self._cats: Dict[Category, _CategoryState] = {}
+        # Frame-lifecycle tracer (core/telemetry.py); None = off.
+        self.tracer = None
+        self.tracer_tag: Optional[str] = None
 
     # ----- request lifecycle -------------------------------------------
     def window_for(self, category: Category, requests: List[Request]) -> float:
@@ -218,6 +222,14 @@ class DisBatcher:
             relative_deadline=st.window,
             shape_key=st.shape_override or cat.shape_key,
         )
+        tr = self.tracer
+        if tr is not None:
+            label = str(cat)
+            for f in frames:
+                tr.emit(T.WINDOW_CLOSE, release_time, f.request_id, f.index,
+                        where=self.tracer_tag, cat=label,
+                        meta={"job_id": job.job_id, "batch": len(frames),
+                              "window": st.window})
         self.emit(job)
         return job
 

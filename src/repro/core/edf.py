@@ -15,13 +15,20 @@ from __future__ import annotations
 import heapq
 import math
 import time as _time
+from collections import deque
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.core import telemetry as T
 from repro.core.bucketing import bucket
 from repro.core.faults import TransientSubmitError
 from repro.core.request import ChunkJob, JobInstance
 from repro.core.simulator import Metrics
+
+#: Retained fused-dispatch decisions (``EDFWorker.chunk_log``). A live
+#: worker dispatches for the process lifetime, so the audit trail is a
+#: capped deque: old entries evict (counted in ``chunk_log_overflow``).
+CHUNK_LOG_CAP = 4096
 
 
 class DeadlineQueue:
@@ -196,8 +203,16 @@ class EDFWorker:
         self.chunk_policy: Optional[ChunkPolicy] = None
         # (dispatch time, chosen depth, head job_id) per fused dispatch —
         # the determinism harness compares this sequence across the
-        # simulated and live substrates.
-        self.chunk_log: List[Tuple[float, int, int]] = []
+        # simulated and live substrates. Bounded (see CHUNK_LOG_CAP);
+        # evictions are counted, and the O(1) depth histogram below keeps
+        # the full-run depth distribution regardless of eviction.
+        self.chunk_log: Deque[Tuple[float, int, int]] = deque(maxlen=CHUNK_LOG_CAP)
+        self.chunk_log_overflow = 0
+        self.chunk_depth_counts: Dict[int, int] = {}
+        # Frame-lifecycle tracer (core/telemetry.py). None = tracing off:
+        # every hook below is a single identity check on the hot path.
+        self.tracer = None
+        self.tracer_tag: Optional[str] = None  # slice name in a cluster
 
     # ----- queue interface (DisBatcher emit target) ---------------------
     def submit(self, job: JobInstance) -> None:
@@ -210,6 +225,13 @@ class EDFWorker:
         job._queued_wcet = w if math.isfinite(w) else 0.0
         self.queued_wcet += job._queued_wcet
         self.queue.push(job)
+        tr = self.tracer
+        if tr is not None:
+            now = self.loop.now
+            for f in job.frames:
+                tr.emit(T.EDF_ENQUEUE, now, f.request_id, f.index,
+                        where=self.tracer_tag, cat=str(job.category),
+                        meta={"job_id": job.job_id, "deadline": job.deadline})
         self._schedule_dispatch()
 
     def _schedule_dispatch(self) -> None:
@@ -287,6 +309,8 @@ class EDFWorker:
                     priority=getattr(self.loop, "PRIO_DISPATCH", 3),
                 )
             return
+        if self.tracer is not None:
+            self._trace_dispatch(job)
         if isinstance(job, ChunkJob) and job.k > 1:
             self.metrics.chunk_submits += 1
             self.metrics.chunked_steps += job.k
@@ -295,6 +319,37 @@ class EDFWorker:
         # metric the hot-path benchmark tracks against the recorded
         # legacy-blocking numbers.
         self.metrics.record_dispatch_overhead(_time.perf_counter() - t_host)
+
+    # ----- telemetry ------------------------------------------------------
+    def _trace_dispatch(self, job) -> None:
+        """Stamp the dispatch hop (per member frame: the queue->device
+        transition plus the profiled WCET the attribution fold caps the
+        device stage at) and the device-submit event (per job)."""
+        tr = self.tracer
+        now = self.loop.now
+        tag = self.tracer_tag
+        members = job.jobs if isinstance(job, ChunkJob) else [job]
+        prof = job.profiled_wcet
+        for m in members:
+            cat = str(m.category)
+            for f in m.frames:
+                tr.emit(T.EDF_DISPATCH, now, f.request_id, f.index,
+                        where=tag, cat=cat,
+                        meta={"job_id": m.job_id, "profiled": prof})
+        tr.emit(T.DEVICE_SUBMIT, now, where=tag,
+                meta={"job_id": job.job_id, "batch": job.batch_size,
+                      "k": getattr(job, "k", 1), "profiled": prof})
+
+    def _trace_terminal(self, frame, now: float) -> None:
+        """Exactly one terminal span per completed frame: ``completed``
+        at/before its deadline, ``late`` past it (the deadline-miss
+        attribution fires inside the tracer on ``late``)."""
+        missed = frame.missed
+        self.tracer.emit(
+            T.LATE if missed else T.COMPLETED, now,
+            frame.request_id, frame.index, where=self.tracer_tag,
+            cat=str(frame.category),
+            meta={"overdue": frame.overdue} if missed else None)
 
     def _maybe_chunk(self, head: JobInstance):
         """Fuse the picked job with the next queued same-category jobs
@@ -336,7 +391,18 @@ class EDFWorker:
             # a tight deadline released late degrades the depth.
             if all(j.deadline - now >= need - 1e-12 for j in run[:d]):
                 chosen = d
+        if len(self.chunk_log) == CHUNK_LOG_CAP:
+            self.chunk_log_overflow += 1
         self.chunk_log.append((now, chosen, head.job_id))
+        self.chunk_depth_counts[chosen] = (
+            self.chunk_depth_counts.get(chosen, 0) + 1
+        )
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.CHUNK_FUSE, now, where=self.tracer_tag,
+                cat=str(head.category),
+                meta={"depth": chosen, "head_job_id": head.job_id,
+                      "run": len(run)})
         for extra in run[1:chosen]:
             self.queue.remove(extra)
             self.queued_wcet = max(
@@ -393,6 +459,12 @@ class EDFWorker:
             return
         job.completion_time = now
         actual = now - job.start_time
+        tr = self.tracer
+        if tr is not None:
+            tr.emit(T.DEVICE_COMPLETE, now, where=self.tracer_tag,
+                    meta={"job_id": job.job_id, "dur": actual,
+                          "k": getattr(job, "k", 1),
+                          "profiled": job.profiled_wcet})
         if isinstance(job, ChunkJob):
             # Fan the single device completion back out to the chunk's
             # member jobs IN ORDER: each keeps its own frames, deadlines,
@@ -414,6 +486,8 @@ class EDFWorker:
                 for f in inner.frames:
                     f.completion_time = now
                     self.metrics.record_frame(f)
+                    if tr is not None:
+                        self._trace_terminal(f, now)
                 if self.on_job_complete is not None:
                     self.on_job_complete(inner, share)
             # Overrun/underrun is judged ONCE, chunk actual vs chunk
@@ -432,6 +506,8 @@ class EDFWorker:
             for f in job.frames:
                 f.completion_time = now
                 self.metrics.record_frame(f)
+                if tr is not None:
+                    self._trace_terminal(f, now)
             if self.on_job_complete is not None:
                 self.on_job_complete(job, actual)
         if job.profiled_wcet is not None:

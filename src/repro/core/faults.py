@@ -28,6 +28,8 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core import telemetry as T
+
 
 class TransientSubmitError(RuntimeError):
     """A submit that failed without damaging the device; safe to retry."""
@@ -210,6 +212,11 @@ class CompletionWatchdog:
         self.config = config
         self.on_overdue = on_overdue
         self.overdue_events = 0
+        # Frame-lifecycle tracer (core/telemetry.py) for standalone
+        # (non-cluster) watchdogs; the cluster lane emits via its
+        # SliceHealthMonitor instead, which knows the slice name.
+        self.tracer = None
+        self.tracer_tag: Optional[str] = None
         self._token = 0
         self._outstanding: Optional[Tuple[int, object, float, float]] = None
         self._eid = None
@@ -252,6 +259,10 @@ class CompletionWatchdog:
         _, job, expected, start = out
         elapsed = self.loop.now - start
         self.overdue_events += 1
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.WATCHDOG_OVERDUE, self.loop.now, where=self.tracer_tag,
+                meta={"expected": expected, "elapsed": elapsed})
         self.on_overdue(job, expected, elapsed)
         # The overdue handler may have quarantined the slice (closing us)
         # by the time it returns; never re-arm in that case.

@@ -22,6 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from repro.core import telemetry as T
 from repro.core.adaptation import AdaptationModule, default_shrink
 from repro.core.admission import (
     AdmissionControl,
@@ -126,6 +127,29 @@ class DeepRT:
             self.worker.chunk_policy = ChunkPolicy.from_table(table)
         self.admitted: List[Request] = []
         self.rejected: List[Request] = []
+        # Frame-lifecycle tracer (core/telemetry.py); attach_tracer wires
+        # the whole pipeline (DisBatcher, EDF worker) in one call.
+        self.tracer = None
+        self.tracer_tag: Optional[str] = None
+
+    def attach_tracer(self, tracer, tag: Optional[str] = None) -> None:
+        """Enable frame-lifecycle tracing across this scheduler's whole
+        pipeline. ``tag`` labels the events (the slice name in a
+        cluster). ``tracer=None`` detaches — tracing reverts to the
+        zero-cost off path."""
+        self.tracer = tracer
+        self.tracer_tag = tag
+        self.worker.tracer = tracer
+        self.worker.tracer_tag = tag
+        self.disbatcher.tracer = tracer
+        self.disbatcher.tracer_tag = tag
+        # Devices that carry a measured-completion lane (AsyncDevice —
+        # possibly behind a FaultyDevice wrapper) get the tracer too;
+        # SequentialDevice defines no ``tracer`` slot and is skipped.
+        for dev in (self.device, getattr(self.device, "inner", None)):
+            if dev is not None and "tracer" in getattr(dev, "__dict__", {}):
+                dev.tracer = tracer
+                dev.tracer_tag = tag
 
     # ----- execution-time plumbing ---------------------------------------
     def _profiled(self, job) -> float:
@@ -193,6 +217,13 @@ class DeepRT:
             self._admit(request, external_arrivals)
         else:
             self.rejected.append(request)
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.ADMISSION, now, where=self.tracer_tag,
+                cat=str(request.category),
+                meta={"request_id": request.request_id,
+                      "admitted": result.admitted, "phase": result.phase,
+                      "utilization": result.utilization})
         return result
 
     def _admit(self, request: Request, external_arrivals: bool = False) -> None:
@@ -240,6 +271,11 @@ class DeepRT:
             # completed + dropped + lost == ingested.
             self.metrics.record_ingest()
             self.metrics.record_lost()
+            if self.tracer is not None:
+                self.tracer.emit(
+                    T.LOST, now, request.request_id, index,
+                    where=self.tracer_tag, cat=str(request.category),
+                    meta={"reason": "device_closed"})
             return None
         frame = Frame(
             request_id=request.request_id,
@@ -252,6 +288,12 @@ class DeepRT:
         )
         self.disbatcher.on_frame(frame)
         self.metrics.record_ingest()
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.INGEST, now, request.request_id, index,
+                where=self.tracer_tag, cat=str(request.category),
+                meta={"deadline": frame.deadline,
+                      "ingest_time": frame.ingest_time})
         if not request.category.realtime:
             pending = self.disbatcher.pending_frames(request.category)
             if len(pending) >= self.nonrt_batch_cap:

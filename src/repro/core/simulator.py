@@ -22,6 +22,8 @@ import time as _time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from repro.core.telemetry import LatencyHistogram
+
 
 class EventLoop:
     """Heap-based virtual-time event loop.
@@ -365,8 +367,21 @@ class ProcessorSharingDevice:
 
 @dataclass
 class Metrics:
-    """Per-run metrics shared by DeepRT and all baselines."""
+    """Per-run metrics shared by DeepRT and all baselines.
 
+    Latency distributions are kept in STREAMING log-bucket histograms
+    (``latency_hist``/``e2e_hist`` — O(1) memory under millions of
+    frames; exact means, percentiles within one bucket growth factor).
+    The raw per-sample lists (``frame_latencies``, ``e2e_latencies``,
+    ``overdue_times``, ``dispatch_overheads``, ``batch_sizes``) and the
+    per-frame ``frame_records`` dict grow with frames served and are
+    only populated while ``record_samples`` is True (the default, for
+    tests and short benchmark runs); long-lived servers set it False and
+    every aggregate below still reads exactly the same values from the
+    histograms and running sums.
+    """
+
+    record_samples: bool = True
     completed_frames: int = 0
     missed_frames: int = 0
     overdue_times: List[float] = field(default_factory=list)
@@ -425,23 +440,34 @@ class Metrics:
     # actually achieved — the amortization the benchmark measures.
     chunk_submits: int = 0
     chunked_steps: int = 0
+    # Streaming latency distributions (always on; O(1) memory).
+    latency_hist: LatencyHistogram = field(default_factory=LatencyHistogram)
+    e2e_hist: LatencyHistogram = field(default_factory=LatencyHistogram)
+    # Running sums backing the means when sample lists are off.
+    dispatch_overhead_sum: float = 0.0
+    dispatch_count: int = 0
 
     def record_frame(self, frame) -> None:
         self.completed_frames += 1
         if self.first_arrival is None or frame.arrival_time < self.first_arrival:
             self.first_arrival = frame.arrival_time
         self.last_completion = max(self.last_completion, frame.completion_time)
-        self.frame_latencies.append(frame.latency)
         e2e = getattr(frame, "e2e_latency", None)
-        self.e2e_latencies.append(e2e if e2e is not None else frame.latency)
-        self.frame_records[(frame.request_id, frame.index)] = (
-            frame.arrival_time,
-            frame.deadline,
-            frame.completion_time,
-        )
+        e2e = e2e if e2e is not None else frame.latency
+        self.latency_hist.record(frame.latency)
+        self.e2e_hist.record(e2e)
+        if self.record_samples:
+            self.frame_latencies.append(frame.latency)
+            self.e2e_latencies.append(e2e)
+            self.frame_records[(frame.request_id, frame.index)] = (
+                frame.arrival_time,
+                frame.deadline,
+                frame.completion_time,
+            )
         if frame.missed:
             self.missed_frames += 1
-            self.overdue_times.append(frame.overdue)
+            if self.record_samples:
+                self.overdue_times.append(frame.overdue)
 
     def record_ingest(self) -> None:
         """One frame delivered into the scheduler at arrival."""
@@ -464,12 +490,16 @@ class Metrics:
         pass it explicitly. Default = no padding (baselines on the
         processor-sharing device run true batch sizes)."""
         self.job_count += 1
-        self.batch_sizes.append(batch_size)
+        if self.record_samples:
+            self.batch_sizes.append(batch_size)
         self.real_rows += batch_size
         self.bucket_rows += bucket_size if bucket_size is not None else batch_size
 
     def record_dispatch_overhead(self, seconds: float) -> None:
-        self.dispatch_overheads.append(seconds)
+        self.dispatch_overhead_sum += seconds
+        self.dispatch_count += 1
+        if self.record_samples:
+            self.dispatch_overheads.append(seconds)
 
     @property
     def miss_rate(self) -> float:
@@ -487,7 +517,9 @@ class Metrics:
 
     @property
     def mean_batch(self) -> float:
-        return sum(self.batch_sizes) / len(self.batch_sizes) if self.batch_sizes else 0.0
+        # real_rows is exactly sum(batch_sizes): the running-sum form
+        # keeps this exact with record_samples=False.
+        return self.real_rows / self.job_count if self.job_count else 0.0
 
     @property
     def padding_waste(self) -> float:
@@ -499,16 +531,20 @@ class Metrics:
     @property
     def mean_latency(self) -> float:
         """Mean scheduler-arrival -> completion latency (seconds)."""
-        if not self.frame_latencies:
-            return 0.0
-        return sum(self.frame_latencies) / len(self.frame_latencies)
+        return self.latency_hist.mean
 
     @property
     def mean_e2e_latency(self) -> float:
         """Mean gateway-ingest -> completion latency (seconds)."""
-        if not self.e2e_latencies:
-            return 0.0
-        return sum(self.e2e_latencies) / len(self.e2e_latencies)
+        return self.e2e_hist.mean
+
+    def latency_percentile(self, q: float) -> float:
+        """Streaming scheduler-latency quantile (log-bucket estimate)."""
+        return self.latency_hist.percentile(q)
+
+    def e2e_percentile(self, q: float) -> float:
+        """Streaming end-to-end-latency quantile (log-bucket estimate)."""
+        return self.e2e_hist.percentile(q)
 
     @property
     def ingested_frames(self) -> int:
@@ -527,6 +563,6 @@ class Metrics:
     @property
     def mean_dispatch_overhead(self) -> float:
         """Mean host-side scheduler stall per job dispatch (seconds)."""
-        if not self.dispatch_overheads:
+        if self.dispatch_count == 0:
             return 0.0
-        return sum(self.dispatch_overheads) / len(self.dispatch_overheads)
+        return self.dispatch_overhead_sum / self.dispatch_count

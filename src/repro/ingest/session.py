@@ -39,6 +39,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set
 
+from repro.core import telemetry as T
 from repro.core.cluster import QUARANTINED
 from repro.core.request import Category, Request
 from repro.ingest.sources import FrameSource
@@ -144,6 +145,10 @@ class IngestGateway:
         self.default_policy = default_policy
         self.shedding = shedding
         self.sessions: List[StreamSession] = []
+        # Frame-lifecycle tracer (core/telemetry.py); None = off. Shed
+        # verdicts are emitted here because the gateway is the only
+        # component that knows WHY a frame never reached the scheduler.
+        self.tracer = None
         self._is_cluster = hasattr(target, "slices")
         health = getattr(target, "health", None)
         if self._is_cluster and health is not None:
@@ -298,7 +303,7 @@ class IngestGateway:
                 and session._shed_phase % policy.keep == 0
             )
             if not keep:
-                self._shed(session, sched, cat)
+                self._shed(session, sched, cat, index)
                 return "shed"
         else:
             session._shed_phase = 0
@@ -308,7 +313,9 @@ class IngestGateway:
         session.frames_delivered += 1
         return "delivered" if frame is not None else "lost"
 
-    def _shed(self, session: StreamSession, sched, cat: Category) -> None:
+    def _shed(
+        self, session: StreamSession, sched, cat: Category, index: int = -1
+    ) -> None:
         session.frames_dropped += 1
         est = getattr(session, "_last_estimate", None)
         session.last_shed_reason = (
@@ -321,6 +328,12 @@ class IngestGateway:
         sl = self._slice_of(session)
         if sl is not None:
             sl.note_dropped(session.request_id)
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.SHED, self.loop.now, session.request_id, index,
+                where=session.slice_name, cat=str(cat),
+                meta={"reason": session.last_shed_reason,
+                      "breakdown": session.last_delay_breakdown})
 
     # -- backpressure estimate -------------------------------------------
     def delay_estimate(

@@ -62,6 +62,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.core import telemetry as T
 from repro.core.request import Category
 from repro.ingest.session import IngestGateway, StreamSession
 from repro.ingest.sources import FrameSource, PeriodicSource
@@ -499,6 +500,10 @@ class TransportServer:
         self.sessions: Dict[int, TransportSession] = {}
         self._by_rid: Dict[int, TransportSession] = {}
         self._sids = itertools.count(1)
+        # Frame-lifecycle tracer (core/telemetry.py); None = off. The
+        # transport is where wire receive / reassembly / wire-loss hops
+        # are stamped (the only component that sees them).
+        self.tracer = None
         self.health_log: List[Tuple[float, str, str, str]] = []
         target = gateway.target
         if hasattr(target, "set_rehome_owner"):
@@ -560,6 +565,14 @@ class TransportServer:
             ts.duplicates += 1
             return
         now = self.loop.now
+        if self.tracer is not None:
+            # Stamps both the receive hop and (via meta["sent_at"]) the
+            # sender-clock send hop for this frame's wire-stage delta.
+            self.tracer.emit(
+                T.WIRE_RECV, now, ts.session.request_id, msg.seq,
+                where=ts.session.slice_name,
+                cat=str(ts.session.request.category),
+                meta={"sent_at": msg.sent_at})
         if now - msg.sent_at > self.late_reject_factor * ts.relative_deadline:
             # Older than its whole deadline budget: it would miss even if
             # the device were idle — reject at the door, resolved as a
@@ -567,7 +580,8 @@ class TransportServer:
             ts.seen.add(msg.seq)
             ts.late_rejected += 1
             self._account_drop(
-                ts, reason=f"late: aged {now - msg.sent_at:.4f}s on the wire"
+                ts, reason=f"late: aged {now - msg.sent_at:.4f}s on the wire",
+                seq=msg.seq,
             )
             return
         if state == "failover":
@@ -628,6 +642,11 @@ class TransportServer:
     def _deliver(self, ts: TransportSession, seq: int, payload) -> None:
         ts.seen.add(seq)
         ts.next_seq = max(ts.next_seq, seq + 1)
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.REASSEMBLY, self.loop.now, ts.session.request_id, seq,
+                where=ts.session.slice_name,
+                cat=str(ts.session.request.category))
         status = self.gateway.deliver(ts.session, seq, payload)
         if status == "delivered":
             ts.delivered += 1
@@ -643,7 +662,9 @@ class TransportServer:
         if status in ("delivered", "shed"):
             self._flow_control(ts)
 
-    def _account_drop(self, ts: TransportSession, reason: str) -> None:
+    def _account_drop(
+        self, ts: TransportSession, reason: str, seq: int = -1
+    ) -> None:
         """Resolve a wire frame as DROPPED at the gateway boundary (the
         bytes arrived; they are rejected, not vanished)."""
         session = ts.session
@@ -655,6 +676,12 @@ class TransportServer:
         sl = self.gateway._slice_of(session)
         if sl is not None:
             sl.note_dropped(session.request_id)
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.SHED, self.loop.now, session.request_id, seq,
+                where=session.slice_name,
+                cat=str(session.request.category),
+                meta={"reason": reason})
 
     def _account_lost(self, ts: TransportSession, seq: int) -> None:
         """Resolve a wire frame the link destroyed as LOST: counted
@@ -670,6 +697,12 @@ class TransportServer:
         sl = self.gateway._slice_of(session)
         if sl is not None:
             sl.note_dropped(session.request_id)
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.LOST, self.loop.now, session.request_id, seq,
+                where=session.slice_name,
+                cat=str(session.request.category),
+                meta={"reason": "wire"})
 
     # -- flow control ------------------------------------------------------
     def _flow_control(self, ts: TransportSession) -> None:
@@ -863,6 +896,17 @@ class TransportServer:
                 "dropped": m.dropped_frames,
                 "lost": m.lost_frames,
                 "duplicate_completions": m.duplicate_completions,
+            }
+        # Unified telemetry: the cluster's full snapshot (slice health,
+        # histograms, probes, miss attribution) rides the same STATUS
+        # reply. The embedding is one-way — the snapshot never embeds
+        # transport state, so there is no recursion.
+        if hasattr(target, "telemetry_snapshot"):
+            out["telemetry"] = target.telemetry_snapshot()
+        elif self.tracer is not None:
+            out["telemetry"] = {
+                "tracer": self.tracer.snapshot(),
+                "attribution": self.tracer.attribution(),
             }
         return out
 

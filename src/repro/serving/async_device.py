@@ -35,6 +35,8 @@ import queue
 import threading
 from typing import Callable, Optional
 
+from repro.core import telemetry as T
+
 
 class _Inflight:
     """One submitted job travelling from the loop to the waiter and back."""
@@ -92,6 +94,11 @@ class AsyncDevice:
         # thread; ``on_measured(expected, actual)`` fires per completion.
         self.watchdog = None
         self.on_measured: Optional[Callable[[float, float], None]] = None
+        # Frame-lifecycle tracer (core/telemetry.py); None = off. This
+        # is the live-only expected-vs-measured lane — simulation has no
+        # hardware clock to disagree with.
+        self.tracer = None
+        self.tracer_tag: Optional[str] = None
         self._lock = threading.Lock()
         self._inflight: Optional[_Inflight] = None
         self._inbox: "queue.Queue" = queue.Queue()
@@ -182,6 +189,10 @@ class AsyncDevice:
         self.resident_bytes -= item.job_bytes
         if self.watchdog is not None:
             self.watchdog.completed()
+        if self.tracer is not None:
+            self.tracer.emit(
+                T.DEVICE_MEASURED, now, where=self.tracer_tag,
+                meta={"expected": item.exec_time, "actual": actual})
         if self._closed:
             # The slice died while this job was in flight: its frames are
             # lost with the slice (the cluster re-admits the request's

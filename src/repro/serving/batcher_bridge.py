@@ -370,6 +370,7 @@ def build_live_scheduler(
     utilization_bound: float = 1.0,
     engine: Optional[InferenceEngine] = None,
     chunk_depth: int = 1,
+    tracer=None,
 ) -> Tuple[DeepRT, InferenceEngine, ProfileTable]:
     """Build the live wall-clock DeepRT over a compiled engine.
 
@@ -400,6 +401,8 @@ def build_live_scheduler(
     sched, _device = _wire_live_scheduler(
         engine, table, WallClock(), kinds, utilization_bound
     )
+    if tracer is not None:
+        sched.attach_tracer(tracer)
     return sched, engine, table
 
 
@@ -414,6 +417,7 @@ def build_live_cluster(
     watchdog: Optional[WatchdogConfig] = None,
     fault_plans: Optional[Dict[str, FaultPlan]] = None,
     chunk_depth: int = 1,
+    tracer=None,
 ) -> Tuple[ClusterScheduler, Dict[str, LiveSlice]]:
     """Build a live multi-slice cluster: ``build_live_scheduler``, sliced.
 
@@ -510,6 +514,11 @@ def build_live_cluster(
         )
         cluster.register(sl)
         slices[name] = sl
+        # Execution-substrate observability: telemetry_snapshot folds in
+        # each engine's arena occupancy / staging-ring reuse via probes.
+        cluster.telemetry_probes[f"engine_{name}"] = engine.telemetry
+    if tracer is not None:
+        cluster.attach_tracer(tracer)
     return cluster, slices
 
 
@@ -528,6 +537,7 @@ def build_live_transport(
     watchdog: Optional[WatchdogConfig] = None,
     fault_plans: Optional[Dict[str, FaultPlan]] = None,
     chunk_depth: int = 1,
+    tracer=None,
     shedding: bool = True,
     udp: bool = False,
     host: str = "127.0.0.1",
@@ -566,9 +576,13 @@ def build_live_transport(
         watchdog=watchdog,
         fault_plans=fault_plans,
         chunk_depth=chunk_depth,
+        tracer=tracer,
     )
     gateway = IngestGateway(cluster, shedding=shedding)
     transport = TransportServer(gateway, **transport_kwargs)
+    if tracer is not None:
+        gateway.tracer = tracer
+        transport.tracer = tracer
     binding = None
     if udp:
         binding = UdpServerBinding(transport, host=host, port=port).start()

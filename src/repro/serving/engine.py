@@ -866,3 +866,32 @@ class InferenceEngine:
         if self.stats["total_slots"] == 0:
             return 0.0
         return max(0.0, 1.0 - self.stats["real_slots"] / self.stats["total_slots"])
+
+    def telemetry(self) -> Dict[str, object]:
+        """JSON-able execution-substrate snapshot: per-arena occupancy
+        and allocator churn, staging-ring reuse, compile/dispatch
+        counters. Registered as a cluster ``telemetry_probes`` entry by
+        the live factory so ``ClusterScheduler.telemetry_snapshot`` folds
+        engine state in without core importing serving."""
+        arenas = {}
+        for (mid, seq), arena in self._arenas.items():
+            arenas[f"{mid}/seq{seq}"] = {
+                "max_slots": arena.max_slots,
+                "free": len(arena.free),
+                "occupied": arena.max_slots - len(arena.free),
+                "allocs": arena.allocs,
+                "resets": arena.resets,
+                "nbytes": self.arena_nbytes(mid, seq),
+            }
+        return {
+            "arenas": arenas,
+            "staging": {
+                "rings": len(self._rings),
+                "bytes": self.staging_bytes,
+                "fills": self.staging_fills,
+                "host_allocs": self.staging_host_allocs,
+            },
+            "stats": dict(self.stats),
+            "padding_waste": self.padding_waste,
+            "frozen": self.frozen,
+        }

@@ -1,0 +1,498 @@
+"""Frame-lifecycle telemetry tests (core/telemetry.py + its wiring).
+
+Covers the observability PR's acceptance bars:
+
+- span ordering / terminal completeness: every delivered frame's trace
+  is time-ordered and ends in EXACTLY ONE terminal span (completed /
+  late / shed / lost) — the trace-level mirror of the conservation
+  identity ``completed + dropped + lost == ingested``;
+- ring-capacity eviction correctness (bounded memory, counted losses);
+- deadline-miss attribution on a deterministic 2x overload: every
+  missed frame carries a per-stage budget that sums to its observed
+  latency (float tolerance), aggregated per category in the snapshot;
+- streaming log-bucket histogram accuracy vs exact samples (the slow
+  lane runs a hypothesis sweep);
+- Metrics stays O(1)-memory with ``record_samples=False``;
+- sim-vs-live trace-shape determinism: the same admitted stream under
+  the EventLoop and under a WallClock + AsyncDevice produces the same
+  per-frame stage sequences.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import pytest
+
+from repro.core import telemetry as T
+from repro.core import (
+    Category,
+    DeepRT,
+    FrameTracer,
+    LatencyHistogram,
+    Metrics,
+    ProfileTable,
+    Request,
+    WallClock,
+    build_sim_cluster,
+    render_text,
+)
+from repro.ingest import BurstSource, IngestGateway
+from repro.serving.async_device import AsyncDevice
+
+MID = "m"
+SHAPE = (4,)
+CAT = Category(MID, SHAPE)
+
+
+def _table() -> ProfileTable:
+    table = ProfileTable()
+    for b in (1, 2, 4, 8, 16, 32):
+        table.record(MID, SHAPE, b, 0.01 + 0.04 * b)
+    return table
+
+
+def _frame_traces(tracer: FrameTracer):
+    """Group ring events per (rid, idx) frame, preserving emit order."""
+    frames = {}
+    for ev in tracer.ring:
+        if ev.rid >= 0 and ev.idx >= 0:
+            frames.setdefault((ev.rid, ev.idx), []).append(ev)
+    return frames
+
+
+# ---------------------------------------------------------------------------
+# Span ordering + terminal completeness
+# ---------------------------------------------------------------------------
+class TestSpanLifecycle:
+    def _run(self, relative_deadline: float, n_frames: int = 12):
+        sched = DeepRT(_table())
+        tracer = FrameTracer()
+        sched.attach_tracer(tracer, tag="solo")
+        req = Request(category=CAT, period=0.1, n_frames=n_frames,
+                      relative_deadline=relative_deadline)
+        assert sched.submit_request(req).admitted
+        metrics = sched.run()
+        return sched, tracer, metrics
+
+    def test_every_frame_ends_in_exactly_one_terminal(self):
+        _sched, tracer, metrics = self._run(relative_deadline=0.5)
+        frames = _frame_traces(tracer)
+        assert len(frames) == 12
+        for key, events in frames.items():
+            times = [ev.t for ev in events]
+            assert times == sorted(times), (key, events)
+            terminals = [ev for ev in events if ev.stage in T.TERMINAL_STAGES]
+            assert len(terminals) == 1, (key, [ev.stage for ev in events])
+            # The terminal is the LAST span of the frame's lifecycle.
+            assert events[-1] is terminals[0], (key, events)
+            assert events[0].stage == T.INGEST, (key, events)
+        # Trace-level conservation mirrors the metrics identity.
+        assert tracer.terminals.get(T.COMPLETED, 0) == metrics.completed_frames
+        assert sum(tracer.terminals.values()) == metrics.delivered_frames
+        # All frames closed out: no leaked open-stamp state.
+        assert not tracer._open
+
+    def test_full_stage_sequence_on_healthy_run(self):
+        _sched, tracer, _metrics = self._run(relative_deadline=0.5)
+        for key, events in _frame_traces(tracer).items():
+            stages = [ev.stage for ev in events]
+            assert stages == [T.INGEST, T.WINDOW_CLOSE, T.EDF_ENQUEUE,
+                              T.EDF_DISPATCH, T.COMPLETED], (key, stages)
+
+    def test_overloaded_frames_still_one_terminal_each(self):
+        # Admission sees the profiled WCET; reality runs 4x over it, so
+        # frames go late — lateness must not double-count or skip
+        # terminals.
+        from repro.core import ExecutionModel
+
+        sched = DeepRT(_table(), execution=ExecutionModel(
+            actual_fn=lambda job, w: 4.0 * w))
+        tracer = FrameTracer()
+        sched.attach_tracer(tracer, tag="solo")
+        req = Request(category=CAT, period=0.1, n_frames=12,
+                      relative_deadline=0.15)
+        assert sched.submit_request(req).admitted
+        metrics = sched.run()
+        assert metrics.missed_frames > 0
+        for key, events in _frame_traces(tracer).items():
+            terminals = [ev for ev in events if ev.stage in T.TERMINAL_STAGES]
+            assert len(terminals) == 1, (key, [ev.stage for ev in events])
+        assert tracer.terminals.get(T.LATE, 0) == metrics.missed_frames
+        assert not tracer._open
+
+    def test_events_tagged_with_slice_and_category(self):
+        _sched, tracer, _metrics = self._run(relative_deadline=0.5)
+        for ev in tracer.ring:
+            assert ev.where == "solo"
+            if ev.rid >= 0:
+                assert ev.cat == str(CAT)
+
+
+# ---------------------------------------------------------------------------
+# Ring eviction
+# ---------------------------------------------------------------------------
+class TestRingEviction:
+    def test_ring_keeps_newest_and_counts_evictions(self):
+        tracer = FrameTracer(capacity=16)
+        for i in range(50):
+            tracer.emit(T.ADMISSION, float(i), where="s0", cat="c")
+        assert len(tracer.ring) == 16
+        assert tracer.emitted == 50
+        assert tracer.evicted == 34
+        assert [ev.t for ev in tracer.ring] == [float(i) for i in range(34, 50)]
+
+    def test_eviction_does_not_corrupt_attribution(self):
+        # Stamps live outside the ring: a frame whose early spans were
+        # evicted still gets a full, correctly-summing breakdown.
+        tracer = FrameTracer(capacity=4)
+        tracer.emit(T.INGEST, 1.0, 7, 0, where="s0", cat="c")
+        for i in range(10):  # flush the ring well past capacity
+            tracer.emit(T.ADMISSION, 2.0 + i, where="s0", cat="c")
+        tracer.emit(T.EDF_DISPATCH, 20.0, 7, 0, where="s0", cat="c",
+                    meta={"profiled": 0.5})
+        tracer.emit(T.LATE, 21.0, 7, 0, where="s0", cat="c")
+        assert len(tracer.miss_log) == 1
+        entry = tracer.miss_log[0]
+        assert entry["total"] == pytest.approx(20.0)
+        assert sum(entry["stages"].values()) == pytest.approx(entry["total"])
+
+    def test_miss_log_capped_with_overflow_counter(self):
+        tracer = FrameTracer(miss_log_cap=8)
+        for i in range(20):
+            tracer.emit(T.INGEST, float(i), 1, i, where="s0", cat="c")
+            tracer.emit(T.LATE, float(i) + 0.5, 1, i, where="s0", cat="c")
+        assert len(tracer.miss_log) == 8
+        assert tracer.miss_log_overflow == 12
+        # Aggregates keep counting past the log cap.
+        agg = tracer.attribution()["by_category"]["c"]
+        assert agg["frames"] == 20
+
+
+# ---------------------------------------------------------------------------
+# Deadline-miss attribution (THE acceptance bar)
+# ---------------------------------------------------------------------------
+class TestMissAttribution:
+    def _overload(self, shedding: bool, n_frames: int = 40):
+        """Deterministic 2x overload replay: the declared-rate stream
+        delivers its whole frame budget in half the admitted time."""
+        sched = DeepRT(_table())
+        tracer = FrameTracer()
+        sched.attach_tracer(tracer, tag="s0")
+        gw = IngestGateway(sched, shedding=shedding)
+        gw.tracer = tracer
+        src = BurstSource(period=0.1, n_frames=n_frames, burst=4, duty=0.5,
+                          payload_shape=SHAPE, seed=11)
+        session = gw.register(src, CAT, relative_deadline=0.2)
+        assert session.state == "active"
+        metrics = sched.run()
+        return session, tracer, metrics
+
+    def test_every_miss_sums_to_observed_latency(self):
+        _session, tracer, metrics = self._overload(shedding=False)
+        assert metrics.missed_frames > 0
+        assert len(tracer.miss_log) == metrics.missed_frames
+        for entry in tracer.miss_log:
+            assert set(entry["stages"]) == set(T.ATTR_STAGES), entry
+            total = sum(entry["stages"].values())
+            assert abs(total - entry["total"]) < 1e-9, entry
+            assert entry["total"] > 0.0, entry
+            assert all(v >= 0.0 for v in entry["stages"].values()), entry
+
+    def test_aggregation_per_category_matches_entries(self):
+        _session, tracer, metrics = self._overload(shedding=False)
+        attr = tracer.attribution()
+        agg = attr["by_category"][str(CAT)]
+        assert agg["frames"] == metrics.missed_frames
+        assert agg["total"] == pytest.approx(
+            sum(e["total"] for e in tracer.miss_log))
+        for stage in T.ATTR_STAGES:
+            assert agg[stage] == pytest.approx(
+                sum(e["stages"][stage] for e in tracer.miss_log))
+        # Slice-scoped aggregation sees the same mass.
+        assert attr["by_slice"]["s0"]["total"] == pytest.approx(agg["total"])
+
+    def test_shed_frames_get_terminal_and_attribution_bucket(self):
+        session, tracer, metrics = self._overload(shedding=True)
+        assert metrics.dropped_frames > 0
+        assert tracer.terminals.get(T.SHED, 0) == metrics.dropped_frames
+        # Conservation at the trace level, shed included.
+        assert sum(tracer.terminals.values()) == session.frames_ingested
+        attr = tracer.attribution()
+        assert "shed" in attr and "lost" in attr
+        shed_events = [ev for ev in tracer.ring if ev.stage == T.SHED]
+        assert shed_events and all(
+            ev.meta and ev.meta.get("reason") for ev in shed_events)
+
+    def test_lost_frames_terminalized_on_dead_device(self):
+        sched = DeepRT(_table())
+        tracer = FrameTracer()
+        sched.attach_tracer(tracer, tag="s0")
+        req = Request(category=CAT, period=0.1, n_frames=3,
+                      relative_deadline=0.5)
+        assert sched.submit_request(req, external_arrivals=True).admitted
+        sched.device._closed = True
+        for i in range(3):
+            sched.ingest_frame(req, i)
+        assert tracer.terminals.get(T.LOST, 0) == 3
+        assert sched.metrics.lost_frames == 3
+
+
+# ---------------------------------------------------------------------------
+# Streaming histogram
+# ---------------------------------------------------------------------------
+class TestLatencyHistogram:
+    def test_exact_count_sum_min_max(self):
+        hist = LatencyHistogram()
+        samples = [0.001 * (i + 1) for i in range(100)]
+        for v in samples:
+            hist.record(v)
+        assert hist.n == 100
+        assert hist.total == pytest.approx(sum(samples))
+        assert hist.vmin == pytest.approx(min(samples))
+        assert hist.vmax == pytest.approx(max(samples))
+        assert hist.mean == pytest.approx(sum(samples) / 100)
+
+    def test_percentile_within_one_growth_factor(self):
+        hist = LatencyHistogram(growth=1.08)
+        samples = [0.0005 * (i + 1) ** 1.3 for i in range(500)]
+        for v in samples:
+            hist.record(v)
+        ordered = sorted(samples)
+        for q in (0.5, 0.9, 0.95, 0.99, 1.0):
+            exact = ordered[max(1, math.ceil(q * len(ordered))) - 1]
+            est = hist.percentile(q)
+            assert exact * (1 - 1e-9) <= est <= exact * 1.08 * (1 + 1e-9), (
+                q, exact, est)
+
+    def test_under_and_overflow_clamped_to_observed(self):
+        hist = LatencyHistogram(min_value=1e-3, max_value=1.0)
+        hist.record(1e-6)   # underflow bucket
+        hist.record(50.0)   # overflow bucket
+        assert hist.n == 2
+        assert hist.percentile(1.0) == pytest.approx(50.0)  # clamp to vmax
+        assert hist.percentile(0.0) <= 1e-3
+
+    def test_merge_equals_union(self):
+        a, b, u = LatencyHistogram(), LatencyHistogram(), LatencyHistogram()
+        xs = [0.002 * (i + 1) for i in range(40)]
+        ys = [0.05 * (i + 1) for i in range(40)]
+        for v in xs:
+            a.record(v)
+            u.record(v)
+        for v in ys:
+            b.record(v)
+            u.record(v)
+        a.merge(b)
+        assert a.n == u.n
+        assert a.total == pytest.approx(u.total)
+        assert a.counts == u.counts
+        assert a.percentile(0.95) == pytest.approx(u.percentile(0.95))
+
+    def test_merge_rejects_mismatched_layout(self):
+        a = LatencyHistogram(growth=1.08)
+        b = LatencyHistogram(growth=1.5)
+        with pytest.raises(ValueError):
+            a.merge(b)
+
+    @pytest.mark.slow
+    def test_percentile_accuracy_random_samples(self):
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (installed in CI)",
+        )
+        from hypothesis import HealthCheck, given, settings
+        from hypothesis import strategies as st
+
+        @settings(
+            max_examples=int(os.environ.get("REPRO_HYPOTHESIS_EXAMPLES", "25")),
+            deadline=None,
+            suppress_health_check=[HealthCheck.too_slow],
+        )
+        @given(
+            samples=st.lists(
+                st.floats(min_value=1e-5, max_value=1e4,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=400),
+            q=st.floats(min_value=0.0, max_value=1.0),
+        )
+        def check(samples, q):
+            hist = LatencyHistogram()
+            for v in samples:
+                hist.record(v)
+            ordered = sorted(samples)
+            exact = ordered[max(1, math.ceil(q * len(ordered))) - 1]
+            est = hist.percentile(q)
+            # Conservative (never under-reports beyond fp noise) and
+            # within one growth factor of the exact sample quantile.
+            assert est >= exact * (1 - 1e-9)
+            assert est <= exact * hist.growth * (1 + 1e-9)
+
+        check()
+
+
+# ---------------------------------------------------------------------------
+# Metrics memory behavior
+# ---------------------------------------------------------------------------
+class TestMetricsMemory:
+    def _run(self, record_samples: bool):
+        sched = DeepRT(_table())
+        sched.metrics.record_samples = record_samples
+        req = Request(category=CAT, period=0.1, n_frames=20,
+                      relative_deadline=0.5)
+        assert sched.submit_request(req).admitted
+        return sched.run()
+
+    def test_record_samples_false_keeps_lists_empty(self):
+        m = self._run(record_samples=False)
+        assert m.completed_frames == 20
+        assert m.frame_latencies == [] and m.e2e_latencies == []
+        # Aggregates stay exact without the sample lists.
+        assert m.latency_hist.n == 20 and m.e2e_hist.n == 20
+        assert m.mean_latency > 0.0 and m.mean_e2e_latency > 0.0
+        assert m.latency_percentile(0.99) >= m.latency_percentile(0.5) > 0.0
+
+    def test_default_keeps_samples_and_agrees_with_hist(self):
+        m = self._run(record_samples=True)
+        assert len(m.frame_latencies) == 20
+        assert m.mean_latency == pytest.approx(
+            sum(m.frame_latencies) / 20, rel=1e-9)
+
+    def test_metrics_standalone_flag(self):
+        m = Metrics(record_samples=False)
+        assert m.record_samples is False
+
+
+# ---------------------------------------------------------------------------
+# Sim-vs-live trace-shape determinism
+# ---------------------------------------------------------------------------
+class _InstantHandle:
+    def wait(self):
+        return None
+
+
+class TestSimLiveTraceShape:
+    def _shapes(self, tracer: FrameTracer):
+        return {key: [ev.stage for ev in events]
+                for key, events in _frame_traces(tracer).items()}
+
+    def test_same_stream_same_stage_sequences(self):
+        n_frames = 4
+        # Sim arm: EventLoop + SequentialDevice.
+        sim = DeepRT(_table())
+        sim_tr = FrameTracer()
+        sim.attach_tracer(sim_tr, tag="s0")
+        req = Request(category=CAT, period=0.08, n_frames=n_frames,
+                      relative_deadline=0.3)
+        assert sim.submit_request(req).admitted
+        sim.run()
+
+        # Live arm: WallClock + AsyncDevice over an instant backend.
+        loop = WallClock()
+        live = DeepRT(_table(), loop=loop,
+                      device=AsyncDevice(loop, lambda job: _InstantHandle()))
+        live_tr = FrameTracer()
+        live.attach_tracer(live_tr, tag="s0")
+        req2 = Request(category=CAT, period=0.08, n_frames=n_frames,
+                       relative_deadline=0.3)
+        assert live.submit_request(req2).admitted
+        live.loop.run(until=live.loop.now + 2.0)
+
+        sim_shapes = self._shapes(sim_tr)
+        live_shapes = self._shapes(live_tr)
+        # Rekey by frame index: request ids differ across schedulers.
+        sim_by_idx = {idx: v for (_rid, idx), v in sim_shapes.items()}
+        live_by_idx = {idx: v for (_rid, idx), v in live_shapes.items()}
+        assert sim_by_idx == live_by_idx
+        assert len(sim_by_idx) == n_frames
+        assert sim_tr.terminals == live_tr.terminals
+
+
+# ---------------------------------------------------------------------------
+# Cluster snapshot + exposition + chrome export
+# ---------------------------------------------------------------------------
+class TestClusterTelemetry:
+    def _cluster(self):
+        cluster = build_sim_cluster(_table, ("s0", "s1"))
+        tracer = FrameTracer()
+        cluster.attach_tracer(tracer)
+        req = Request(category=CAT, period=0.1, n_frames=10,
+                      relative_deadline=0.5)
+        assert cluster.submit_request(req)
+        cluster.run()
+        return cluster, tracer
+
+    def test_snapshot_is_json_serializable_and_complete(self):
+        cluster, _tracer = self._cluster()
+        snap = cluster.telemetry_snapshot()
+        json.dumps(snap)  # must round-trip
+        assert set(snap["slices"]) == {"s0", "s1"}
+        for name, sl in snap["slices"].items():
+            assert sl["health"] and "utilization" in sl, name
+            assert "latency" in sl and "e2e" in sl, name
+        assert snap["aggregate"]["completed_frames"] == 10
+        assert "e2e_p99" in snap["aggregate"]
+        assert snap["tracer"]["emitted"] > 0
+        assert snap["attribution"]["terminals"].get("completed", 0) == 10
+
+    def test_text_exposition_renders_numeric_leaves(self):
+        cluster, _tracer = self._cluster()
+        text = cluster.telemetry_text()
+        lines = text.strip().splitlines()
+        assert lines == sorted(lines)
+        assert any(l.startswith("deeprt_aggregate_completed_frames ")
+                   for l in lines), text
+        for line in lines:
+            name, value = line.rsplit(" ", 1)
+            float(value)  # every exposed leaf is numeric
+
+    def test_chrome_trace_export(self, tmp_path):
+        _cluster, tracer = self._cluster()
+        doc = tracer.chrome_trace()
+        assert doc["traceEvents"]
+        for ev in doc["traceEvents"]:
+            assert ev["ph"] in ("i", "X")
+            assert ev["ts"] >= 0.0
+        out = tmp_path / "trace.json"
+        tracer.dump_chrome_trace(str(out))
+        loaded = json.loads(out.read_text())
+        assert len(loaded["traceEvents"]) == len(doc["traceEvents"])
+
+    def test_tracer_default_off(self):
+        sched = DeepRT(_table())
+        assert sched.tracer is None
+        assert sched.worker.tracer is None
+        assert sched.disbatcher.tracer is None
+        cluster = build_sim_cluster(_table, ("s0",))
+        assert cluster.tracer is None
+
+
+# ---------------------------------------------------------------------------
+# Capped unbounded-growth logs (satellite)
+# ---------------------------------------------------------------------------
+class TestCappedLogs:
+    def test_chunk_log_is_capped_deque(self):
+        from collections import deque
+
+        from repro.core.edf import CHUNK_LOG_CAP
+
+        sched = DeepRT(_table())
+        assert isinstance(sched.worker.chunk_log, deque)
+        assert sched.worker.chunk_log.maxlen == CHUNK_LOG_CAP
+        assert sched.worker.chunk_log_overflow == 0
+
+    def test_placement_attempts_capped_with_overflow(self):
+        from collections import deque
+
+        cluster = build_sim_cluster(_table, ("s0",))
+        assert cluster.placement_attempts.maxlen is not None
+        # Shrink the audit trail so the eviction path is cheap to hit;
+        # the overflow logic keys off the deque's own maxlen.
+        cluster.placement_attempts = deque(maxlen=8)
+        for i in range(13):
+            req = Request(category=CAT, period=10.0, n_frames=1,
+                          relative_deadline=0.5)
+            cluster.submit_request(req)
+        assert len(cluster.placement_attempts) == 8
+        assert cluster.placement_attempts_overflow == 5
