@@ -27,6 +27,7 @@ SUITES = [
     ("ingest_serving", "benchmarks.ingest_serving"),
     ("fault_tolerance", "benchmarks.fault_tolerance"),
     ("transport_robustness", "benchmarks.transport_robustness"),
+    ("transport_churn", "benchmarks.transport_churn"),
     ("decode_chunking", "benchmarks.decode_chunking"),
     ("telemetry_overhead", "benchmarks.telemetry_overhead"),
 ]

@@ -103,6 +103,23 @@ class Slice:
         self.alive = True
         self.health = HEALTHY
         self.slow_factor = 1.0
+        # Lease ledger — request_id -> token from ``_alloc``. The base
+        # (simulation) slice tracks SYMBOLIC leases so lifecycle
+        # invariants ("every terminal path releases its lease") are
+        # checkable without live arenas; LiveSlice's ``_alloc``/``_free``
+        # back the same ledger with real arena rows.
+        self.leases: Dict[int, object] = {}
+        self._frames_left: Dict[int, int] = {}
+        # Release rows when a request's last frame completes, without
+        # stealing the adaptation module's completion hook.
+        prev = self.scheduler.worker.on_job_complete
+
+        def _chained(job, actual, _prev=prev):
+            if _prev is not None:
+                _prev(job, actual)
+            self._on_job_complete(job)
+
+        self.scheduler.worker.on_job_complete = _chained
 
     def hosts(self, request: Request) -> bool:
         if not self.alive:
@@ -116,29 +133,70 @@ class Slice:
     def utilization(self) -> float:
         return self.scheduler.utilization()
 
-    # -- capacity leases (no-ops in simulation; LiveSlice overrides) ------
+    # -- capacity leases ---------------------------------------------------
     def can_lease(self, request: Request) -> bool:
         return True
 
-    def lease(self, request: Request) -> None:
+    def _alloc(self, request: Request):
+        """Resource hook: return the token recorded in ``leases`` (None
+        = this request needs no resident resource). The sim token is
+        symbolic — no backing resource, only the ledger entry."""
+        return ("sim", request.category.model_id)
+
+    def _free(self, token) -> None:
         pass
 
+    def lease(self, request: Request) -> None:
+        token = self._alloc(request)
+        if token is None:
+            return
+        self.leases[request.request_id] = token
+        self._frames_left[request.request_id] = request.n_frames
+
     def release(self, request_id: int) -> None:
-        pass
+        token = self.leases.pop(request_id, None)
+        self._frames_left.pop(request_id, None)
+        if token is None:
+            return
+        if not self.alive:
+            # Dead slice: its resources must never be touched again —
+            # the lease record is dropped, the backing rows stay as the
+            # failure left them.
+            return
+        self._free(token)
+
+    def _count_frame_done(self, rid: int) -> None:
+        """One of ``rid``'s frames will never need the leased resource
+        again (completed OR shed upstream); release on the last."""
+        left = self._frames_left.get(rid)
+        if left is None:
+            return
+        if left <= 1:
+            self.release(rid)
+        else:
+            self._frames_left[rid] = left - 1
 
     def note_dropped(self, request_id: int) -> None:
         """Gateway shed one frame of this request: one fewer completion
-        will ever arrive, so lease frame-countdowns must advance (no-op
-        for sim slices, which hold no leases)."""
+        will ever arrive, so the lease frame-countdown must advance."""
+        self._count_frame_done(request_id)
+
+    def _on_job_complete(self, job) -> None:
+        for frame in job.frames:
+            self._count_frame_done(frame.request_id)
 
     def shutdown(self) -> None:
         """Fail-stop: stop hosting new requests and close the device
         (both contract implementations swallow any in-flight completion
         and report not-idle forever, so the dead scheduler's queued jobs
         never start — simulation and live fail identically). LiveSlice
-        extends this to freeze its engine."""
+        extends this to freeze its engine. The lease ledger clears —
+        nothing can release through a dead slice, and ``fail_slice``
+        reconciles the frames those leases were counting."""
         self.alive = False
         self.scheduler.device.close()
+        self.leases.clear()
+        self._frames_left.clear()
 
 
 class LiveSlice(Slice):
@@ -166,20 +224,8 @@ class LiveSlice(Slice):
         # The live factory passes the SAME dict it gave the dispatch
         # closure, so slot-aligned payload staging always sees current
         # leases (shared by reference, one source of truth).
-        self.leases: Dict[int, Tuple[str, int, Tuple[int, ...]]] = (
-            {} if leases is None else leases
-        )
-        self._frames_left: Dict[int, int] = {}
-        # Release rows when a request's last frame completes, without
-        # stealing the adaptation module's completion hook.
-        prev = scheduler.worker.on_job_complete
-
-        def _chained(job, actual, _prev=prev):
-            if _prev is not None:
-                _prev(job, actual)
-            self._on_job_complete(job)
-
-        scheduler.worker.on_job_complete = _chained
+        if leases is not None:
+            self.leases = leases
 
     def _decode_key(self, request: Request) -> Optional[Tuple[str, int]]:
         cat = request.category
@@ -194,48 +240,20 @@ class LiveSlice(Slice):
             return True  # prefill / unknown: no resident row needed
         return len(self.engine.arena(*key).free) >= 1
 
-    def lease(self, request: Request) -> None:
+    def _alloc(self, request: Request):
         """Pin one arena row for an admitted decode stream (one sequence
         = one resident KV row). Caller must have checked ``can_lease``;
         the allocator raises on exhaustion rather than reshaping."""
         key = self._decode_key(request)
         if key is None:
-            return
+            return None  # prefill / unknown: no resident row needed
         mid, seq = key
         slots = self.engine.alloc_slots(mid, seq, 1)
-        self.leases[request.request_id] = (mid, seq, slots)
-        self._frames_left[request.request_id] = request.n_frames
+        return (mid, seq, slots)
 
-    def release(self, request_id: int) -> None:
-        lease = self.leases.pop(request_id, None)
-        self._frames_left.pop(request_id, None)
-        if lease is None:
-            return
-        if not self.alive:
-            # Dead slice: its engine is frozen and its arena rows must
-            # never be touched again — the lease record is dropped, the
-            # rows stay as the failure left them.
-            return
-        mid, seq, slots = lease
+    def _free(self, token) -> None:
+        mid, seq, slots = token
         self.engine.free_slots(mid, seq, slots)
-
-    def _count_frame_done(self, rid: int) -> None:
-        """One of ``rid``'s frames will never need the arena row again
-        (completed OR shed upstream); release the lease on the last."""
-        left = self._frames_left.get(rid)
-        if left is None:
-            return
-        if left <= 1:
-            self.release(rid)
-        else:
-            self._frames_left[rid] = left - 1
-
-    def note_dropped(self, request_id: int) -> None:
-        self._count_frame_done(request_id)
-
-    def _on_job_complete(self, job) -> None:
-        for frame in job.frames:
-            self._count_frame_done(frame.request_id)
 
     def shutdown(self) -> None:
         """Fail-stop the live stack: the device is closed by the base
@@ -483,6 +501,9 @@ class ClusterScheduler:
         self.parked: Dict[int, ParkedTail] = {}
         self.parked_admitted: List[int] = []
         self.parked_expired: List[int] = []
+        # Subset of parked_expired withdrawn by their rehome owner
+        # (transport eviction) rather than by clock expiry.
+        self.parked_cancelled: List[int] = []
         # Session re-homing hook (the transport server registers here):
         # an object with owns(rid) / rehomed(origin_rid, tail, slice) /
         # expired(origin_rid). Tails it owns are re-admitted as EXTERNAL
@@ -580,6 +601,7 @@ class ClusterScheduler:
             self.health._set_state(name, QUARANTINED, "fail_slice (operator)")
         sl.shutdown()
         displaced: List[Tuple[int, Request]] = []
+        finished_now: List[int] = []
         now = self.loop.now
         for rid, placed_on in list(self.placement.items()):
             if placed_on != name:
@@ -590,6 +612,7 @@ class ClusterScheduler:
                 # Already fully arrived; in-flight frames lost with the
                 # slice, nothing left to re-admit.
                 self.finished_with_slice.append(rid)
+                finished_now.append(rid)
                 continue
             # Frames with arrival <= now are lost with the slice. floor,
             # not int(): a request whose start is still in the future
@@ -600,6 +623,7 @@ class ClusterScheduler:
             remaining = req.n_frames - max(0, arrived)
             if remaining <= 0:
                 self.finished_with_slice.append(rid)
+                finished_now.append(rid)
                 continue
             # Re-admit the remaining tail as a fresh request.
             tail = Request(
@@ -619,6 +643,15 @@ class ClusterScheduler:
             m.record_lost(in_pipeline)
         parked_now: List[Request] = []
         owner = self.rehome_owner
+        # Requests with no deliverable tail are OVER at the failover
+        # instant: resolve their owner's session now (same callback as a
+        # parked tail expiring), or a transport session aborted into
+        # ``failover`` state would wait forever for a re-home that is
+        # never coming. ``finished_with_slice`` stays their ledger —
+        # they never enter ``failover_map``.
+        for rid in finished_now:
+            if owner is not None and owner.owns(rid):
+                owner.expired(rid)
         for rid, tail in displaced:
             owned = owner is not None and owner.owns(rid)
             if self._try_place(tail, external_arrivals=owned):
@@ -694,6 +727,20 @@ class ClusterScheduler:
             return
         entry.attempts += 1
         self._schedule_retry(entry)
+
+    def cancel_parked(self, origin_rid: int) -> bool:
+        """Owner-initiated withdrawal of a parked tail (the transport
+        evicted the session it belonged to): the entry resolves as
+        expired-by-cancellation and can never be re-admitted. No
+        ``rehome_owner.expired`` callback — the owner asked. The pending
+        retry finds the entry gone and is a no-op."""
+        entry = self.parked.pop(origin_rid, None)
+        if entry is None:
+            return False
+        self.parked_expired.append(origin_rid)
+        self.parked_cancelled.append(origin_rid)
+        self.failover_map[origin_rid] = None
+        return True
 
     # -- placement + admission --------------------------------------------
     def submit_request(
@@ -781,6 +828,7 @@ class ClusterScheduler:
             "parked": len(self.parked),
             "parked_admitted": len(self.parked_admitted),
             "parked_expired": len(self.parked_expired),
+            "parked_cancelled": len(self.parked_cancelled),
         }
 
     def telemetry_snapshot(self) -> Dict:
@@ -812,6 +860,7 @@ class ClusterScheduler:
                 "chunk_depths": {str(k): v for k, v in
                                  sorted(w.chunk_depth_counts.items())},
                 "chunk_log_overflow": w.chunk_log_overflow,
+                "leases": len(sl.leases),
                 "admission": dict(sl.scheduler.admission.stats),
                 "adaptation": sl.scheduler.adaptation.telemetry(),
             }

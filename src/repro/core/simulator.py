@@ -411,6 +411,10 @@ class Metrics:
     # here (never silently vanished) — total and per request stream.
     dropped_frames: int = 0
     drops_by_request: Dict[int, int] = field(default_factory=dict)
+    # Deadline misses per request stream: lets a cohort (e.g. the
+    # transport churn benchmark's live sessions) compute its own
+    # effective miss rate without per-frame sample recording.
+    missed_by_request: Dict[int, int] = field(default_factory=dict)
     # Frames handed to the scheduler (``DeepRT.ingest_frame``), counted
     # INDEPENDENTLY of completions so the conservation property below is
     # falsifiable — a delivered frame the scheduler loses shows up as
@@ -466,6 +470,9 @@ class Metrics:
             )
         if frame.missed:
             self.missed_frames += 1
+            self.missed_by_request[frame.request_id] = (
+                self.missed_by_request.get(frame.request_id, 0) + 1
+            )
             if self.record_samples:
                 self.overdue_times.append(frame.overdue)
 

@@ -14,8 +14,10 @@ from repro.ingest.staging import StagingRing
 from repro.ingest.transport import (
     DROP,
     DUPLICATE,
+    HELLO_RETRY,
     LINK_DELAY,
     LINK_FAULT_KINDS,
+    MALFORMED,
     REORDER,
     LinkFault,
     LinkPlan,
@@ -48,6 +50,8 @@ __all__ = [
     "UdpServerBinding",
     "DROP",
     "DUPLICATE",
+    "HELLO_RETRY",
+    "MALFORMED",
     "REORDER",
     "LINK_DELAY",
     "LINK_FAULT_KINDS",

@@ -222,6 +222,21 @@ class IngestGateway:
     def close(self, session: StreamSession) -> None:
         """End a stream early: cancel undelivered arrivals, release the
         arena-row lease, retire the request from its DisBatcher."""
+        if session.state == "failover":
+            # Evicted while its tail is parked awaiting re-admission:
+            # cancel the parked retry so it can never resurrect the
+            # stream, and release the dead slice's lease record.
+            session.state = "closed"
+            for eid in session._events:
+                self.loop.cancel(eid)
+            session._events.clear()
+            sl = self._slice_of(session)
+            if sl is not None:
+                sl.release(session.request_id)
+            cancel = getattr(self.target, "cancel_parked", None)
+            if cancel is not None:
+                cancel(session.request_id)
+            return
         if session.state != "active":
             return
         session.state = "closed"

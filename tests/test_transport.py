@@ -140,8 +140,11 @@ class TestCodec:
         assert body == {"sid": 3, "total": 17}
 
     def test_bad_magic_rejected(self):
-        with pytest.raises(ValueError):
-            decode(b"NOPE" + bytes(16))
+        from repro.ingest.transport import MALFORMED
+
+        mtype, reason = decode(b"NOPE" + bytes(16))
+        assert mtype == MALFORMED
+        assert reason == "bad_magic"
 
 
 # ---------------------------------------------------------------------------
